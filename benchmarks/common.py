@@ -1,0 +1,69 @@
+"""Shared rollout machinery for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import make_agent
+from repro.mec import MECEnv, RunningMetrics, make_scenario
+
+METHODS = ("grle", "grl", "drooe", "droo")
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def rollout_method(method: str, scenario: str, *, n_devices: int,
+                   slot_ms: float, slots: int, seed: int = 0):
+    cfg = make_scenario(scenario, n_devices=n_devices, slot_ms=slot_ms)
+    env = MECEnv(cfg)
+    key = jax.random.PRNGKey(seed)
+    agent = make_agent(method, env, key, seed=seed)
+    metrics = RunningMetrics(slot_s=cfg.slot_s)
+    state = env.reset()
+    t0 = time.time()
+    for _ in range(slots):
+        key, sk = jax.random.split(key)
+        tasks = env.sample_slot(sk)
+        dec, _ = agent.act(state, tasks)
+        state, res = env.step(state, tasks, dec)
+        metrics.update(res, tasks.active)
+    out = metrics.summary()
+    out.update(method=method, scenario=scenario, n_devices=n_devices,
+               slot_ms=slot_ms, slots=slots,
+               wall_s=round(time.time() - t0, 1))
+    return out
+
+
+def sweep_methods(scenario: str, *, device_counts, slot_lengths_ms, slots,
+                  seed=0, methods=METHODS):
+    rows = []
+    for method in methods:
+        for m in device_counts:
+            for tau in slot_lengths_ms:
+                row = rollout_method(method, scenario, n_devices=m,
+                                     slot_ms=tau, slots=slots, seed=seed)
+                rows.append(row)
+                print(f"  {method:6s} M={m:3d} tau={tau:4.0f}ms  "
+                      f"acc={row['avg_accuracy']:.3f} ssp={row['ssp']:.3f} "
+                      f"thr={row['throughput_tps']:.1f}/s", flush=True)
+    return rows
+
+
+def save_rows(name: str, rows) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def print_csv(name: str, rows, keys) -> None:
+    print(f"# {name}")
+    print(",".join(["name"] + list(keys)))
+    for r in rows:
+        label = f"{name}/{r.get('method', '')}-M{r.get('n_devices', '')}" \
+                f"-t{r.get('slot_ms', '')}"
+        print(",".join([label] + [f"{r.get(k, '')}" for k in keys]))

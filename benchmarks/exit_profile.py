@@ -1,0 +1,32 @@
+"""Table I / Fig 3 — early-exit accuracy & latency profile of VGG-16.
+
+Trains the multi-exit VGG on the synthetic task (two-stage recipe, §VI-B)
+and reports accuracy + measured CPU latency + analytic TPU-v5e latency per
+candidate exit, alongside the paper's published Table I values.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import save_rows
+from repro.mec.profiles import VGG16_TABLE_I
+from repro.vgg import profile_exits, train_vgg_ee
+
+
+def run(quick: bool = False):
+    steps = 120 if quick else 400
+    params, hist = train_vgg_ee(jax.random.PRNGKey(0), width_mult=0.25,
+                                steps_main=steps, steps_exits=steps,
+                                batch=64, noise=1.2)
+    rows = profile_exits(params, eval_batches=3 if quick else 10, batch=128,
+                         noise=1.2)
+    pub = {int(e): (a, r1, r2) for e, a, r1, r2 in zip(
+        VGG16_TABLE_I["exit_no"], VGG16_TABLE_I["accuracy"],
+        VGG16_TABLE_I["ms_rtx2080ti"], VGG16_TABLE_I["ms_gtx1080ti"])}
+    for r in rows:
+        a, r1, r2 = pub[r["exit"]]
+        r.update(paper_accuracy=float(a), paper_ms_rtx=float(r1),
+                 paper_ms_gtx=float(r2),
+                 final_main_loss=hist["main_loss"][-1])
+    save_rows("exit_profile", rows)
+    return rows

@@ -1,0 +1,19 @@
+"""Paper figure benchmark: scenario 'fig5_baseline' — GRLE vs GRL vs DROOE vs DROO.
+
+Sweeps the number of IoT devices M and the slot length τ, reporting
+average inference accuracy, service success probability and throughput
+(§VI-D definitions).
+"""
+from __future__ import annotations
+
+from benchmarks.common import save_rows, sweep_methods
+
+
+def run(quick: bool = False):
+    device_counts = (6, 10, 14) if not quick else (6, 10)
+    taus = (10.0, 30.0) if "vary_devices" == "vary_devices" else (30.0,)
+    slots = 150 if quick else 500
+    rows = sweep_methods("fig5_baseline", device_counts=device_counts,
+                         slot_lengths_ms=taus, slots=slots)
+    save_rows("vary_devices", rows)
+    return rows

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: GRLE — graph-RL early-exit offloading."""
+from repro.core.graph import MECGraph, build_graph, pad_graph
+from repro.core.quantize import (
+    one_hot_candidates,
+    binary_order_preserving,
+    max_candidates,
+)
+from repro.core.replay import ReplayBuffer
+from repro.core.agent import OffloadingAgent, make_agent
+
+__all__ = [
+    "MECGraph", "build_graph", "pad_graph",
+    "one_hot_candidates", "binary_order_preserving", "max_candidates",
+    "ReplayBuffer", "OffloadingAgent", "make_agent",
+]

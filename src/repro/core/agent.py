@@ -1,0 +1,206 @@
+"""GRLE agent (Algorithm 1) and its ablations.
+
+One `OffloadingAgent` covers the paper's four methods:
+
+  GRLE  = actor="gcn" + early_exit=True      (the paper's contribution)
+  GRL   = actor="gcn" + early_exit=False
+  DROOE = actor="mlp" + early_exit=True
+  DROO  = actor="mlp" + early_exit=False     (Huang et al. 2020 baseline)
+
+The actor predicts a relaxed decision x̂ over (device, option) edges; the
+critic quantizes it into S candidates (order-preserving), scores each with
+the reward simulator (Eq 15) and keeps the best; (G_k, x*_k) goes to the
+replay buffer; every ω slots the actor trains on a minibatch with the
+cross-entropy loss (Eq 16), Adam lr=1e-3 — all per §VI-A.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gcn
+from repro.core.graph import MECGraph, build_graph
+from repro.core.quantize import max_candidates, one_hot_candidates
+from repro.core.replay import ReplayBuffer
+from repro.mec.env import MECEnv, MECState, SlotTasks
+from repro.nn import Linear, MLP
+from repro.optim import adam
+from repro.optim.optimizers import apply_updates
+
+
+# --------------------------------------------------------------------- actors
+class MLPActor:
+    """DROO's DNN actor: flat channel-state features -> edge scores.
+
+    Per the paper (§VI-C), DROO(E) sees only wireless channel state and task
+    info — no queue backlogs, no ES capacity — which is exactly its stated
+    weakness vs the GCN.
+    """
+
+    @staticmethod
+    def init(key, n_devices: int, n_servers: int, n_options: int,
+             hidden: int = 256):
+        in_dim = n_devices * (n_servers + 2)
+        k1, k2 = jax.random.split(key)
+        return {
+            "trunk": MLP.init(k1, in_dim, hidden, hidden),
+            "head": Linear.init(k2, hidden, n_devices * n_options),
+        }
+
+    @staticmethod
+    def features(g: MECGraph, n_exits: int):
+        # edge_rate was expanded over exits in build_graph; recover [M, N]
+        rates = g.adj[:, ::n_exits]
+        task = g.device_feat[:, :2]                  # size, deadline
+        return jnp.concatenate([rates, task], axis=-1).reshape(-1)
+
+    @staticmethod
+    def apply(params, g: MECGraph, n_exits: int):
+        x = MLPActor.features(g, n_exits)
+        h = jax.nn.relu(MLP.apply(params["trunk"], x))
+        m, o = g.adj.shape
+        logits = Linear.apply(params["head"], h).reshape(m, o)
+        logits = jnp.where(g.mask > 0.5, logits, -1e9)
+        return jax.nn.sigmoid(logits), logits
+
+
+# ---------------------------------------------------------------------- agent
+class OffloadingAgent:
+    def __init__(self, env: MECEnv, key: jax.Array, *, actor: str = "gcn",
+                 early_exit: bool = True, hidden=(128, 64),
+                 buffer_size: int = 128, batch_size: int = 64,
+                 train_every: int = 10, lr: float = 1e-3,
+                 n_candidates: Optional[int] = None, seed: int = 0,
+                 use_kernel: bool = False):
+        self.env = env
+        self.actor_type = actor
+        self.early_exit = early_exit
+        self.batch_size = batch_size
+        self.train_every = train_every
+        self.use_kernel = use_kernel
+        M, N, L = env.M, env.N, env.L
+        self.n_exits = L
+        s_max = max_candidates(M, N * L)
+        self.n_candidates = min(n_candidates or M * N * L, s_max)
+
+        if actor == "gcn":
+            dev_dim, opt_dim = 7, 4   # 6 obs features + device-id
+            self.params = gcn.init(key, dev_dim, opt_dim, hidden=hidden)
+        elif actor == "mlp":
+            self.params = MLPActor.init(key, M, N, N * L)
+        else:
+            raise ValueError(f"unknown actor {actor!r}")
+
+        self.opt = adam(lr)
+        self.opt_state = self.opt.init(self.params)
+        self.replay = ReplayBuffer(buffer_size, seed=seed)
+        self.loss_history: list[float] = []
+        self._steps = 0
+
+        # exit mask: without early-exit only the final exit is allowed
+        mask = np.zeros((N * L,), np.float32)
+        mask[:] = 1.0
+        if not early_exit:
+            mask[:] = 0.0
+            mask[L - 1::L] = 1.0
+        self._exit_mask = jnp.asarray(mask)
+
+        self._score_fn = jax.jit(self._scores)
+        self._train_fn = jax.jit(self._train_step)
+        self._decide_fn = jax.jit(self._decide)
+        self._key = jax.random.fold_in(key, 0xC0FFEE)
+        # DROO keeps exploration alive by perturbing its relaxed action; we
+        # add K random-valid candidates to the critic's set (same effect,
+        # exactly S+K evaluations)
+        self.n_random = 16
+
+    # ------------------------------------------------------------- actor pass
+    def _scores(self, params, g: MECGraph):
+        if self.actor_type == "gcn":
+            x_hat, logits = gcn.apply(params, g)
+        else:
+            x_hat, logits = MLPActor.apply(params, g, self.n_exits)
+        # disallowed (masked-exit or disconnected) options get -inf scores so
+        # the order-preserving quantizer can never flip a device onto them
+        allowed = (self._exit_mask[None, :] > 0.5) & (g.mask > 0.5)
+        x_hat = jnp.where(allowed, x_hat, -1e9)
+        logits = jnp.where(allowed, logits, -1e9)
+        return x_hat, logits
+
+    # --------------------------------------------------------------- decision
+    def _decide(self, params, state: MECState, tasks: SlotTasks, key):
+        """Fused actor+critic pass (one device dispatch per slot)."""
+        obs = self.env.observe(state, tasks)
+        g = build_graph(obs, self.env.N, self.env.L)
+        x_hat, _ = self._scores(params, g)
+        cands = one_hot_candidates(x_hat, self.n_candidates)
+        if self.n_random:
+            # exploration candidates drawn uniformly over *allowed* options
+            allowed = (self._exit_mask[None, :] > 0.5) & (g.mask > 0.5)
+            gumbel = jax.random.gumbel(
+                key, (self.n_random, *allowed.shape))
+            rand = jnp.argmax(jnp.where(allowed[None], gumbel, -jnp.inf),
+                              axis=-1).astype(jnp.int32)
+            cands = jnp.concatenate([cands, rand], axis=0)
+        q = self.env.evaluate(state, tasks, cands)
+        best = jnp.argmax(q)
+        return cands[best], q[best], g
+
+    def act(self, state: MECState, tasks: SlotTasks, *, train: bool = True):
+        """Algorithm 1, one slot. Returns (decision [M], info dict)."""
+        self._key, sub = jax.random.split(self._key)
+        decision, q_best, g = self._decide_fn(self.params, state, tasks, sub)
+        info = {"q_est": float(q_best), "n_candidates": self.n_candidates}
+        if train:
+            self.replay.add(g, decision)
+            self._steps += 1
+            if self._steps % self.train_every == 0 and len(self.replay) >= 2:
+                info["loss"] = self.train_minibatch()
+        return decision, info
+
+    # ---------------------------------------------------------------- training
+    def _loss(self, params, graphs: MECGraph, decisions):
+        """Averaged masked BCE over edges (Eq 16)."""
+
+        def one(g, dec):
+            _, logits = self._scores(params, g)
+            m, o = logits.shape
+            target = jax.nn.one_hot(dec, o)                       # [M, O]
+            valid = g.mask * self._exit_mask[None, :]
+            # numerically-stable BCE from logits
+            per_edge = jnp.maximum(logits, 0) - logits * target \
+                + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+            return jnp.sum(per_edge * valid) / jnp.maximum(valid.sum(), 1.0)
+
+        return jnp.mean(jax.vmap(one)(graphs, decisions))
+
+    def _train_step(self, params, opt_state, graphs, decisions):
+        loss, grads = jax.value_and_grad(self._loss)(params, graphs, decisions)
+        updates, opt_state = self.opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    def train_minibatch(self) -> float:
+        graphs, decisions = self.replay.sample(self.batch_size)
+        graphs = MECGraph(*(jnp.asarray(p) for p in graphs))
+        self.params, self.opt_state, loss = self._train_fn(
+            self.params, self.opt_state, graphs, jnp.asarray(decisions))
+        loss = float(loss)
+        self.loss_history.append(loss)
+        return loss
+
+
+def make_agent(method: str, env: MECEnv, key: jax.Array, **kw) -> OffloadingAgent:
+    """Factory for the paper's four methods by name."""
+    table = {
+        "grle": dict(actor="gcn", early_exit=True),
+        "grl": dict(actor="gcn", early_exit=False),
+        "drooe": dict(actor="mlp", early_exit=True),
+        "droo": dict(actor="mlp", early_exit=False),
+    }
+    spec = dict(table[method.lower()])
+    spec.update(kw)
+    return OffloadingAgent(env, key, **spec)

@@ -1,0 +1,61 @@
+"""MEC state -> bipartite graph tensors (paper §V-C).
+
+Vertices: M IoT devices and N*L early-exit options. Each device is connected
+to every (server, exit) option whose link is up; edge weight = normalized
+rate estimate of the device->server link (the physical uplink the offload
+would use).
+
+We represent the graph densely — [M, O] adjacency with O = N*L — because M
+and O are tens, not millions: dense masked matmuls are the TPU-native form
+of message passing (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class MECGraph(NamedTuple):
+    device_feat: jnp.ndarray   # [M, Fd]
+    option_feat: jnp.ndarray   # [O, Fo]
+    adj: jnp.ndarray           # [M, O] edge weights (0 = disconnected)
+    mask: jnp.ndarray          # [M, O] 1.0 where an edge exists
+
+
+def build_graph(obs: dict, n_servers: int, n_exits: int,
+                *, device_id: bool = True) -> MECGraph:
+    """Assemble graph tensors from ``MECEnv.observe`` output.
+
+    ``device_id`` appends a per-device index feature. A purely equivariant
+    GCN cannot express the symmetry-breaking assignments the critic makes
+    (two near-identical devices must go to *different* servers to balance
+    the queue); the id feature breaks the tie the same way DROO's fixed
+    input slots do. Set False for topology-transfer experiments.
+    """
+    device = obs["device"]                      # [M, Fd]
+    if device_id:
+        m = device.shape[0]
+        ids = (jnp.arange(m, dtype=device.dtype) / max(m - 1, 1))[:, None]
+        device = jnp.concatenate([device, ids], axis=-1)
+    option = obs["option"]                      # [N*L, Fo]
+    # expand per-server link quantities over that server's L exit options
+    rate = jnp.repeat(obs["edge_rate"], n_exits, axis=1)    # [M, N*L]
+    mask = jnp.repeat(obs["connect"], n_exits, axis=1)      # [M, N*L]
+    adj = rate * mask
+    return MECGraph(device, option, adj, mask)
+
+
+def pad_graph(g: MECGraph, max_devices: int) -> MECGraph:
+    """Zero-pad the device dimension so replay buffers over dynamic-M
+    scenarios have static shapes (padded devices have no edges)."""
+    m = g.device_feat.shape[0]
+    if m == max_devices:
+        return g
+    pad = max_devices - m
+    return MECGraph(
+        jnp.pad(g.device_feat, ((0, pad), (0, 0))),
+        g.option_feat,
+        jnp.pad(g.adj, ((0, pad), (0, 0))),
+        jnp.pad(g.mask, ((0, pad), (0, 0))),
+    )

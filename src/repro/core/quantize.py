@@ -1,0 +1,78 @@
+"""Order-preserving quantization (paper §V-D, adapted from DROO).
+
+DROO's order-preserving method quantizes a relaxed binary vector by flipping
+entries in order of |x̂ − 0.5|. GRLE's action is *one-hot per device* over
+O = N·L options, so we adapt (DESIGN.md §5):
+
+  candidate 0      = per-device argmax of x̂,
+  candidate s ≥ 1  = candidate 0 with the (device, option) pair of the s-th
+                     smallest score *margin* (gap to that device's current
+                     best) flipped to that option.
+
+Margins are ordered globally, preserving the order structure of the relaxed
+scores exactly as DROO does for the binary case, and yielding up to
+S = M·(O−1)+1 ≈ M·N·L candidates (the paper's S = MNL).
+
+``binary_order_preserving`` is the original DROO scheme, used by the DROO
+baseline on its per-device offload relaxation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def one_hot_candidates(scores: jax.Array, n_candidates: int) -> jax.Array:
+    """scores [M, O] -> candidate decisions [S, M] (ints in [0, O)).
+
+    ``n_candidates`` is static; pass min(S_max, M*(O-1)+1).
+    """
+    m, o = scores.shape
+    best = jnp.argmax(scores, axis=-1)                       # [M]
+    best_score = jnp.take_along_axis(scores, best[:, None], -1)  # [M, 1]
+    margin = best_score - scores                              # [M, O] >= 0
+    # the argmax itself must never be "flipped to": give it +inf margin
+    margin = margin.at[jnp.arange(m), best].set(jnp.inf)
+    flat = margin.reshape(-1)
+    order = jnp.argsort(flat)                                 # ascending gap
+    dev_of = order // o                                       # [M*O]
+    opt_of = order % o
+    # masked/disallowed options carry ~1e9 margins (the actor scores them
+    # -inf): flipping onto them must be a no-op, not an illegal decision
+    valid_flip = flat[order] < 1e8
+    opt_of = jnp.where(valid_flip, opt_of, best[dev_of])
+
+    s = n_candidates
+    base = jnp.tile(best[None, :], (s, 1))                    # [S, M]
+    idx = jnp.arange(s)
+    # candidate 0 keeps the argmax; candidate k flips pair k-1
+    flip_dev = dev_of[jnp.maximum(idx - 1, 0)]
+    flip_opt = opt_of[jnp.maximum(idx - 1, 0)]
+    flipped = base.at[idx, flip_dev].set(flip_opt.astype(base.dtype))
+    return jnp.where((idx == 0)[:, None], base, flipped).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def binary_order_preserving(x_hat: jax.Array, n_candidates: int) -> jax.Array:
+    """Original DROO order-preserving quantization.
+
+    x_hat [M] in (0,1) -> binary candidates [S, M]: candidate 0 thresholds
+    at 0.5; candidate s thresholds at the s-th order statistic of |x̂−0.5|.
+    """
+    m = x_hat.shape[0]
+    base = (x_hat > 0.5).astype(jnp.int32)                    # [M]
+    dist = jnp.abs(x_hat - 0.5)
+    order = jnp.argsort(dist)                                 # ascending
+    s = n_candidates
+    idx = jnp.arange(s)
+    flips = order[jnp.minimum(jnp.maximum(idx - 1, 0), m - 1)]
+    cands = jnp.tile(base[None, :], (s, 1))
+    flipped = cands.at[idx, flips].set(1 - cands[idx, flips])
+    return jnp.where((idx == 0)[:, None], cands, flipped)
+
+
+def max_candidates(n_devices: int, n_options: int) -> int:
+    return n_devices * (n_options - 1) + 1

@@ -1,0 +1,39 @@
+"""Experience replay buffer (paper §V-E: size 128, minibatch 64).
+
+Stores (graph tensors, optimal decision) pairs with static shapes so the
+training step stays jit-compiled. Host-side ring buffer; minibatches are
+assembled as stacked device arrays.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import MECGraph
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int = 128, seed: int = 0):
+        self.capacity = capacity
+        self._store: list = [None] * capacity
+        self._ptr = 0
+        self._size = 0
+        self._rng = np.random.default_rng(seed)
+
+    def add(self, graph: MECGraph, decision) -> None:
+        entry = (
+            tuple(np.asarray(x) for x in graph),
+            np.asarray(decision),
+        )
+        self._store[self._ptr] = entry
+        self._ptr = (self._ptr + 1) % self.capacity
+        self._size = min(self._size + 1, self.capacity)
+
+    def __len__(self) -> int:
+        return self._size
+
+    def sample(self, batch_size: int):
+        """Random minibatch -> (MECGraph of stacked tensors, decisions [B, M])."""
+        idx = self._rng.integers(0, self._size, size=min(batch_size, self._size))
+        graphs, decisions = zip(*(self._store[i] for i in idx))
+        stacked = MECGraph(*(np.stack(parts) for parts in zip(*graphs)))
+        return stacked, np.stack(decisions)

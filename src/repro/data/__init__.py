@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    SyntheticImages,
+    TokenStream,
+    synthetic_batch_iterator,
+)
+
+__all__ = ["SyntheticImages", "TokenStream", "synthetic_batch_iterator"]

@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU these dispatch to the compiled kernels; on CPU (this container)
+they run the kernel bodies in interpret mode for validation, or fall back
+to the jnp references for speed. The model code keeps its jnp paths as the
+dry-run lowering target (Pallas does not lower on the CPU backend) —
+``use_pallas=True`` is the real-hardware switch. See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gcn_agg import gcn_agg as _gcn
+from repro.kernels.ssm_scan import ssm_scan as _ssm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128, use_pallas=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                      block_k=block_k, interpret=not _on_tpu())
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def decode_attention(q, k, v, lengths, *, block_k=256, use_pallas=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _decode(q, k, v, lengths, block_k=block_k,
+                       interpret=not _on_tpu())
+    return _ref.decode_attention_ref(q, k, v, lengths)
+
+
+def ssm_scan(q, k, v, log_w, bonus_u=None, *, chunk=128, use_pallas=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _ssm(q, k, v, log_w, bonus_u, chunk=chunk,
+                    interpret=not _on_tpu())
+    y, _ = _ref.ssm_scan_ref(q, k, v, log_w, bonus_u=bonus_u)
+    return y
+
+
+def gcn_agg(adj, self_feat, nbr_feat, w_self, w_nbr, bias, *,
+            use_pallas=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _gcn(adj, self_feat, nbr_feat, w_self, w_nbr, bias,
+                    interpret=not _on_tpu())
+    return _ref.gcn_agg_ref(adj, self_feat, nbr_feat, w_self, w_nbr, bias)

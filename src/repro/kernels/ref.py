@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
+                        scale=None):
+    """q [B,S,H,d], k/v [B,S,KVH,d] -> [B,S,H,d]. Plain softmax attention."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale or 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, s, kvh, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= qpos - kpos < window
+    logits = jnp.where(ok[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale=None):
+    """q [B,H,d] one token; k/v [B,S,KVH,d]; lengths [B] = #valid slots."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale or 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, kvh, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def ssm_scan_ref(q, k, v, log_w, *, bonus_u=None, initial_state=None):
+    """Sequential linear-recurrence oracle (same semantics as
+    repro.models.ssm.naive_linear_attn, scan-based)."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        qt, kt, vt, wt = inp
+        w = jnp.exp(wt.astype(jnp.float32))
+        upd = jnp.einsum("bhd,bhe->bhde", kt.astype(jnp.float32),
+                         vt.astype(jnp.float32))
+        if bonus_u is None:
+            s = s * w[..., None] + upd
+            y = jnp.einsum("bhd,bhde->bhe", qt.astype(jnp.float32), s)
+        else:
+            y = jnp.einsum("bhd,bhde->bhe", qt.astype(jnp.float32), s) \
+                + jnp.einsum("bhd,hd,bhd,bhe->bhe",
+                             qt.astype(jnp.float32), bonus_u,
+                             kt.astype(jnp.float32), vt.astype(jnp.float32))
+            s = s * w[..., None] + upd
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (q, k, v, log_w))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype), s
+
+
+def gcn_agg_ref(adj, self_feat, nbr_feat, w_self, w_nbr, bias):
+    """Degree-normalized neighbor aggregation + fused linear + relu.
+
+    adj [B, M, O], self_feat [B, M, Fs], nbr_feat [B, O, Fn],
+    w_self [Fs, H], w_nbr [Fn, H], bias [H] -> [B, M, H].
+    Equivalent to relu(concat(self, agg) @ [w_self; w_nbr] + b) — Eq. 12.
+    """
+    deg = adj.sum(-1, keepdims=True)
+    agg = (adj @ nbr_feat) / (deg + 1e-6)
+    pre = self_feat @ w_self + agg @ w_nbr + bias
+    return jax.nn.relu(pre)

@@ -1,0 +1,267 @@
+"""Roofline inputs from the compiled dry-run artifact.
+
+Two tools (EXPERIMENTS.md §Roofline methodology):
+
+1. ``collective_bytes_nested`` — walks the post-SPMD HLO text, attributing
+   each all-gather / all-reduce / reduce-scatter / all-to-all /
+   collective-permute to its enclosing computation, and multiplying ops
+   inside ``while`` bodies by the loop trip count (parsed from the loop
+   condition's comparison constant). This matters because the layer stack
+   is a ``lax.scan``: XLA's cost analysis — and a naive text scan — counts
+   the body once instead of n_layers times.
+
+2. ``flops_bytes_model`` — an analytic per-op FLOPs/HBM-bytes model for
+   every architecture × input shape. The CPU backend's
+   ``compiled.cost_analysis()`` has the same while-body blind spot, so the
+   compute/memory roofline terms come from this model (validated against
+   cost_analysis on scan-free reduced configs in tests).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.models.config import ArchConfig, ShapeSpec
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_SHAPE_RE = re.compile(r"(pred|s4|s8|s16|s32|u8|u16|u32|u64|bf16|f16|f32|f64|"
+                       r"c64|c128)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def parse_computations(hlo_text: str):
+    comps: Dict[str, dict] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        s = raw.strip()
+        if not s:
+            continue
+        if s.endswith("{") and "=" not in s.split("(")[0]:
+            m = _HEADER_RE.match(s)
+            if m:
+                cur = m.group(2)
+                comps[cur] = {"colls": [], "whiles": [], "consts": []}
+                if m.group(1):
+                    entry = cur
+                continue
+        if s == "}":
+            continue
+        if cur is None or "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        rhs_s = rhs.strip()
+        for kind in _COLLECTIVES:
+            # HLO form: `%name = TYPE all-reduce(...)`; match start ops too
+            # (all-gather-start); skip -done (no payload of its own)
+            if (f" {kind}(" in rhs_s or f" {kind}-start(" in rhs_s
+                    or rhs_s.startswith(kind + "(")
+                    or rhs_s.startswith(kind + "-start(")):
+                # result type precedes the op name on the rhs
+                result_type = rhs_s.split(f" {kind}")[0] or lhs
+                comps[cur]["colls"].append((kind, _shape_bytes(result_type)))
+                break
+        wm = _WHILE_RE.search(rhs_s)
+        if " while(" in rhs_s or rhs_s.startswith("while("):
+            if wm:
+                comps[cur]["whiles"].append((wm.group(1), wm.group(2)))
+        for c in _CONST_RE.finditer(rhs_s):
+            comps[cur]["consts"].append(int(c.group(1)))
+    return comps, entry
+
+
+def collective_bytes_nested(hlo_text: str) -> dict:
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        return {}
+
+    def trip(cond_name: str) -> int:
+        consts = comps.get(cond_name, {}).get("consts", [])
+        return max(consts) if consts else 1
+
+    out = {k: {"bytes": 0.0, "count": 0.0, "wire_bytes": 0.0}
+           for k in _COLLECTIVES}
+
+    def walk(name: str, mult: float, depth: int = 0):
+        if depth > 8 or name not in comps:
+            return
+        node = comps[name]
+        for kind, nbytes in node["colls"]:
+            out[kind]["bytes"] += nbytes * mult
+            out[kind]["count"] += mult
+            out[kind]["wire_bytes"] += nbytes * mult * _WIRE_FACTOR[kind]
+        for cond, body in node["whiles"]:
+            walk(body, mult * trip(cond), depth + 1)
+
+    walk(entry, 1.0)
+    return {k: v for k, v in out.items() if v["count"]}
+
+
+# --------------------------------------------------------------------------
+# Analytic FLOPs / HBM-bytes model (global; divide by chips for per-device).
+# --------------------------------------------------------------------------
+def _param_count(cfg: ArchConfig) -> dict:
+    d, f, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    out = {"embed": V * d, "head": d * V}
+    per_layer = 0.0
+    if cfg.attn_kind == "gqa":
+        hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        per_layer += d * h * hd + 2 * d * kvh * hd + h * hd * d
+    elif cfg.attn_kind == "mla":
+        r, dn, dr, dv = (cfg.kv_lora_rank, cfg.nope_head_dim,
+                         cfg.rope_head_dim, cfg.v_head_dim)
+        h = cfg.n_heads
+        per_layer += d * h * (dn + dr) + d * r + d * dr \
+            + r * h * (dn + dv) + h * dv * d
+    if cfg.ssm_kind == "rwkv6":
+        per_layer += 5 * d * d + 2 * d * f + d * d   # time-mix + channel-mix
+    elif cfg.ssm_kind == "mamba2":
+        di = cfg.ssm_expand * d
+        per_layer += d * (2 * di + 2 * cfg.d_state + di // cfg.ssm_head_dim) \
+            + di * d
+    if cfg.is_moe:
+        per_layer += d * cfg.n_experts \
+            + cfg.n_experts * 3 * d * cfg.moe_d_ff \
+            + cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+        active_per_layer = per_layer - (cfg.n_experts - cfg.top_k) \
+            * 3 * d * cfg.moe_d_ff
+    elif cfg.ssm_kind == "none" or cfg.shared_attn_every:
+        per_layer += 3 * d * f
+        active_per_layer = per_layer
+    else:
+        active_per_layer = per_layer
+    if cfg.ssm_kind != "none" and not cfg.is_moe and not cfg.shared_attn_every:
+        active_per_layer = per_layer
+    shared = 0.0
+    if cfg.shared_attn_every:
+        hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        shared = d * h * hd + 2 * d * kvh * hd + h * hd * d + 3 * d * f
+    enc = 0.0
+    if cfg.enc_layers:
+        hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        enc = cfg.enc_layers * (d * h * hd + 2 * d * kvh * hd + h * hd * d
+                                + 3 * d * f)
+    out.update(per_layer=per_layer, active_per_layer=active_per_layer,
+               shared=shared, enc=enc)
+    out["total"] = (out["embed"] + out["head"] + L * per_layer + shared + enc)
+    out["active"] = (out["embed"] + out["head"] + L * active_per_layer
+                     + shared + enc)
+    return out
+
+
+def flops_bytes_model(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Global FLOPs and HBM bytes for one step of the given mode."""
+    p = _param_count(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers
+    bpe = 2.0                                   # bf16
+
+    if shape.mode in ("train", "prefill"):
+        T = B * S
+        flops = 2.0 * T * p["active"]           # matmul fwd
+        # attention math (causal avg S/2), windowed if set
+        if cfg.attn_kind in ("gqa", "mla"):
+            hd = (cfg.nope_head_dim + cfg.rope_head_dim
+                  if cfg.attn_kind == "mla" else cfg.head_dim)
+            dv = cfg.v_head_dim if cfg.attn_kind == "mla" else cfg.head_dim
+            span = min(S / 2, cfg.window or S)
+            n_attn = L if not cfg.shared_attn_every else (
+                L // cfg.shared_attn_every)
+            flops += 2.0 * T * span * cfg.n_heads * (hd + dv) * n_attn
+        if cfg.enc_layers:
+            F = cfg.n_audio_frames
+            flops += 2.0 * B * F * F * cfg.n_heads * cfg.head_dim \
+                * 2 * cfg.enc_layers                        # enc self-attn
+            flops += 2.0 * T * F * cfg.n_heads * cfg.head_dim * 2 * L  # cross
+        if cfg.ssm_kind != "none":
+            dk = cfg.d_state if cfg.ssm_kind == "mamba2" else cfg.ssm_head_dim
+            dvs = cfg.ssm_head_dim
+            heads = ((cfg.ssm_expand * d) // cfg.ssm_head_dim
+                     if cfg.ssm_kind == "mamba2" else d // cfg.ssm_head_dim)
+            C = cfg.ssm_chunk
+            # intra-chunk [C,C] matmuls + state update/read
+            flops += L * (B * S) * heads * (2 * C * (dk + dvs)
+                                            + 4 * dk * dvs)
+        # extra exits: head matmul per exit
+        flops += 2.0 * T * d * cfg.vocab * max(len(cfg.exit_layers) - 1, 0)
+        act_bytes = L * T * d * bpe
+        if shape.mode == "train":
+            flops *= 4.0                        # fwd + bwd(2x) + remat refwd
+            bytes_ = (3 * p["total"] * bpe      # weights fwd+refwd+bwd reads
+                      + p["total"] * bpe        # grads write
+                      + 3 * p["total"] * 8.0    # adam m,v f32 read+write
+                      + 6 * act_bytes)          # save + reload + grads
+        else:
+            bytes_ = p["total"] * bpe + 4 * act_bytes \
+                + (2 * p["per_layer"] and 0.0)
+            # prefill also writes the KV cache:
+            bytes_ += _cache_bytes(cfg, B, S)
+        return {"flops": flops, "bytes": bytes_, "model_flops":
+                (6.0 if shape.mode == "train" else 2.0) * p["active"] * T}
+
+    # decode: one token per sequence
+    T = B
+    flops = 2.0 * T * p["active"]
+    cache_b = _cache_bytes(cfg, B, S)
+    if cfg.attn_kind in ("gqa", "mla"):
+        span = min(S, cfg.window or S)
+        hd = (cfg.kv_lora_rank + cfg.rope_head_dim
+              if cfg.attn_kind == "mla" else cfg.head_dim)
+        n_attn = L if not cfg.shared_attn_every else (
+            L // cfg.shared_attn_every)
+        flops += 2.0 * T * span * cfg.n_heads * hd * 2 * n_attn
+    if cfg.ssm_kind != "none":
+        dk = cfg.d_state if cfg.ssm_kind == "mamba2" else cfg.ssm_head_dim
+        heads = ((cfg.ssm_expand * d) // cfg.ssm_head_dim
+                 if cfg.ssm_kind == "mamba2" else d // cfg.ssm_head_dim)
+        flops += L * T * heads * 4 * dk * cfg.ssm_head_dim
+    bytes_ = p["active"] * bpe + cache_b   # weights + full cache read
+    return {"flops": flops, "bytes": bytes_,
+            "model_flops": 2.0 * p["active"] * T}
+
+
+def _cache_bytes(cfg: ArchConfig, B: int, S: int) -> float:
+    bpe = 2.0
+    span = min(S, cfg.window or S)
+    if cfg.enc_layers:
+        kv = cfg.n_layers * B * span * 2 * cfg.n_kv_heads * cfg.head_dim
+        kv += B * cfg.n_audio_frames * cfg.d_model
+        return kv * bpe
+    if cfg.attn_kind == "mla":
+        return cfg.n_layers * B * S * (cfg.kv_lora_rank
+                                       + cfg.rope_head_dim) * bpe
+    total = 0.0
+    if cfg.attn_kind == "gqa" and not cfg.shared_attn_every:
+        total += cfg.n_layers * B * span * 2 * cfg.n_kv_heads * cfg.head_dim
+    if cfg.shared_attn_every:
+        n_sh = len(range(cfg.shared_attn_every, cfg.n_layers + 1,
+                         cfg.shared_attn_every))
+        total += n_sh * B * S * 2 * cfg.n_kv_heads * cfg.head_dim
+    if cfg.ssm_kind == "rwkv6":
+        h = cfg.d_model // cfg.ssm_head_dim
+        total += cfg.n_layers * B * h * cfg.ssm_head_dim ** 2 * 2  # f32
+    elif cfg.ssm_kind == "mamba2":
+        di = cfg.ssm_expand * cfg.d_model
+        h = di // cfg.ssm_head_dim
+        total += cfg.n_layers * B * h * cfg.d_state * cfg.ssm_head_dim * 2
+    return total * bpe

@@ -1,0 +1,48 @@
+"""Serving driver: GRLE-scheduled early-exit LM inference.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_0_5b \
+        --reduced --slots 20 --decode
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.serve import EdgeServingEngine, Replica, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--decode", action="store_true")
+    ap.add_argument("--scheduler", default="grle",
+                    choices=["grle", "grl", "droo", "drooe", "static"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    engine = EdgeServingEngine(
+        cfg, [Replica("fast-pod", 1.0), Replica("slow-pod", 0.5)],
+        scheduler=None if args.scheduler == "static" else args.scheduler,
+        batch_slots=args.batch, seed=args.seed)
+
+    rng = np.random.default_rng(args.seed)
+    for slot in range(args.slots):
+        reqs = [Request(tokens=rng.integers(0, cfg.vocab, size=8,
+                                            dtype=np.int32),
+                        deadline_s=0.05, max_new=4)
+                for _ in range(args.batch)]
+        assignments, info = engine.serve_slot(reqs, decode=args.decode)
+        line = ", ".join(f"{r}@exit{e}" for r, e in assignments)
+        print(f"slot {slot:3d} reward {info['reward']:.3f}  [{line}]",
+              flush=True)
+    print("summary:", engine.metrics.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch × shape).
+
+Everything here is abstract (``jax.eval_shape``) — no device allocation, so
+the 236B configs are as cheap to spec as the 0.5B ones. This is the single
+source of truth the dry-run, the roofline benchmark and the launchers use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import INPUT_SHAPES, ArchConfig, ShapeSpec
+from repro.models.lm import model_for
+from repro.optim import adamw
+from repro.sharding.partition import (
+    _batch_axes,
+    cache_pspecs,
+    make_named_sharding,
+    param_pspecs,
+)
+from repro.train.steps import TrainState
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+def arch_for_shape(cfg: ArchConfig, shape: ShapeSpec) -> ArchConfig:
+    """Shape-dependent config tweaks (DESIGN.md §4).
+
+    * ``long_500k`` on a quadratic-attention family switches to
+      sliding-window decode attention (the sub-quadratic variant we add
+      beyond the paper). SSM archs run natively; Zamba2's shared-attention
+      cache is seq-sharded instead (its Mamba backbone is O(1)).
+    """
+    if (shape.name == "long_500k" and cfg.attn_kind != "none"
+            and cfg.family != "hybrid"):
+        return dataclasses.replace(cfg, window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _batched(mesh, shape, dtype):
+    baxes = _batch_axes(mesh, shape[0])
+    spec = P(baxes, *([None] * (len(shape) - 1)))
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def params_struct(cfg: ArchConfig, mesh):
+    from repro.sharding.runtime import enabled
+    model = model_for(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+    spec_cfg = cfg
+    if enabled("no_fsdp_infer") and cfg.fsdp:
+        # OPT-1 (§Perf): inference weights replicate over `data` — the FSDP
+        # sharding only pays off when optimizer state exists.
+        spec_cfg = dataclasses.replace(cfg, fsdp=False)
+    specs = param_pspecs(spec_cfg, shapes, mesh)
+    shardings = make_named_sharding(mesh, specs)
+    struct = jax.tree_util.tree_map(
+        lambda v, s: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s),
+        shapes, shardings)
+    return struct, specs
+
+
+def train_state_struct(cfg: ArchConfig, mesh, optimizer=None):
+    model = model_for(cfg)
+    opt = optimizer or adamw(3e-4)
+
+    def build():
+        params = model.init(jax.random.PRNGKey(0), cfg)
+        return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+    shapes = jax.eval_shape(build)
+    pspecs = param_pspecs(cfg, shapes.params, mesh)
+    opt_specs = {
+        "step": P(),
+        "mu": param_pspecs(cfg, shapes.opt_state["mu"], mesh),
+        "nu": param_pspecs(cfg, shapes.opt_state["nu"], mesh),
+    }
+    specs = TrainState(pspecs, opt_specs, P())
+    shardings = make_named_sharding(mesh, specs)
+    struct = jax.tree_util.tree_map(
+        lambda v, s: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s),
+        shapes, shardings)
+    return struct, specs, opt
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    gb, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _batched(mesh, (gb, s), jnp.int32),
+        "labels": _batched(mesh, (gb, s), jnp.int32),
+    }
+    if cfg.enc_layers:
+        batch["audio"] = _batched(
+            mesh, (gb, cfg.n_audio_frames, cfg.d_model), cfg.jnp_dtype)
+    if shape.mode == "prefill":
+        del batch["labels"]
+    return batch
+
+
+def decode_struct(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    model = model_for(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(cfg, b, s))
+    cspecs = cache_pspecs(cfg, cache_shapes, mesh, s)
+    cshard = make_named_sharding(mesh, cspecs)
+    cache = jax.tree_util.tree_map(
+        lambda v, sh: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=sh),
+        cache_shapes, cshard)
+    tokens = _batched(mesh, (b,), jnp.int32)
+    pos = _batched(mesh, (b,), jnp.int32)
+    return cache, tokens, pos
+
+
+def describe(cfg: ArchConfig) -> dict:
+    """Parameter count + activated params (MoE) — for DESIGN/EXPERIMENTS."""
+    import math
+    model = model_for(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+    total = sum(math.prod(v.shape)
+                for v in jax.tree_util.tree_leaves(shapes))
+    active = total
+    if cfg.is_moe:
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * per_expert
+        active = total - inactive
+    return {"params": int(total), "active_params": int(active)}

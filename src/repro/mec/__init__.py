@@ -1,0 +1,18 @@
+from repro.mec.config import MECConfig
+from repro.mec.profiles import (
+    VGG16_TABLE_I,
+    CANDIDATE_EXITS,
+    exit_profile_gpu,
+    exit_profile_tpu_v5e,
+    llm_exit_profile,
+)
+from repro.mec.env import MECEnv, MECState, SlotTasks, SlotResult
+from repro.mec.metrics import RunningMetrics
+from repro.mec.scenarios import make_scenario, SCENARIOS
+
+__all__ = [
+    "MECConfig", "MECEnv", "MECState", "SlotTasks", "SlotResult",
+    "VGG16_TABLE_I", "CANDIDATE_EXITS", "exit_profile_gpu",
+    "exit_profile_tpu_v5e", "llm_exit_profile",
+    "RunningMetrics", "make_scenario", "SCENARIOS",
+]

@@ -1,0 +1,62 @@
+"""MEC network configuration (paper §VI-A defaults)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.mec.profiles import exit_profile_gpu
+
+
+@dataclasses.dataclass(frozen=True)
+class MECConfig:
+    """Static description of one MEC network instance.
+
+    Defaults reproduce §VI-A: 14 IoT devices, 2 ESs (RTX 2080TI + GTX
+    1080TI), deadline 30 ms, task size 50–100 KB, uplink 20–100 Mbps,
+    slot length τ = 30 ms, five candidate VGG-16 exits (Table I).
+    """
+
+    n_devices: int = 14
+    n_servers: int = 2
+    # [N, L] seconds and [L] accuracy — from Table I by default.
+    exit_times_s: Tuple[Tuple[float, ...], ...] = None  # type: ignore[assignment]
+    exit_accuracy: Tuple[float, ...] = None             # type: ignore[assignment]
+    slot_s: float = 30e-3                # τ
+    deadline_s: float = 30e-3            # δ
+    task_kbytes: Tuple[float, float] = (50.0, 100.0)
+    rate_mbps: Tuple[float, float] = (20.0, 100.0)
+    # Dynamic-MEC knobs (paper §VI-D scenarios)
+    capacity_range: Tuple[float, float] = (1.0, 1.0)     # stochastic ES capacity
+    inference_jitter: float = 0.0                        # ±fraction of t_cmp
+    csi_error: float = 0.0                               # ±fraction rate estimate error
+    connectivity_drop: float = 0.0                       # P(device-ES link down)
+    early_exit: bool = True              # False => only the final exit is usable
+
+    def __post_init__(self):
+        if self.exit_times_s is None:
+            times, acc = exit_profile_gpu()
+            times = times[: self.n_servers]
+            if times.shape[0] < self.n_servers:
+                # replicate profile cyclically for N > 2 what-if scenarios
+                reps = int(np.ceil(self.n_servers / times.shape[0]))
+                times = np.tile(times, (reps, 1))[: self.n_servers]
+            object.__setattr__(self, "exit_times_s",
+                               tuple(map(tuple, times.tolist())))
+            object.__setattr__(self, "exit_accuracy", tuple(acc.tolist()))
+
+    @property
+    def n_exits(self) -> int:
+        return len(self.exit_accuracy)
+
+    @property
+    def n_options(self) -> int:
+        """Per-device action arity: one (server, exit) pair."""
+        return self.n_servers * self.n_exits
+
+    def exit_times(self) -> np.ndarray:
+        return np.asarray(self.exit_times_s, dtype=np.float32)
+
+    def accuracies(self) -> np.ndarray:
+        return np.asarray(self.exit_accuracy, dtype=np.float32)

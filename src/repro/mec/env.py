@@ -1,0 +1,277 @@
+"""Dynamic MEC simulator — Eqs (1)–(11) of the paper, JAX-native.
+
+Design notes
+------------
+* All per-slot dynamics are pure jnp functions so the critic can ``vmap``
+  the reward over S candidate decisions (paper Eq. 15) entirely on-device.
+* FCFS queueing (Eqs 6–7) is implemented by sorting the slot's tasks by
+  (server, arrival time) with ``jnp.lexsort`` and scanning a per-server
+  ``busy_until`` vector with ``lax.scan`` — the TPU-idiomatic form of the
+  sequential waiting-time recursion (DESIGN.md §3).
+* Imperfect information: ``SlotTasks`` carries both *estimated* quantities
+  (what the scheduler sees: rate estimates with ±csi_error, nominal exit
+  times, observed capacity) and *realized* ones (true rates, ±jitter on
+  inference time). ``evaluate()`` scores candidates with estimates;
+  ``step()`` realizes the chosen action with ground truth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mec.config import MECConfig
+
+
+class MECState(NamedTuple):
+    """Persistent queue state across slots."""
+    dev_free: jax.Array   # [M] time instant each device's uplink is free
+    es_free: jax.Array    # [N] time instant each ES is free
+    slot: jax.Array       # scalar int32
+
+
+class SlotTasks(NamedTuple):
+    """One slot's task draw (estimated + realized views)."""
+    size_bits: jax.Array      # [M]
+    deadline_s: jax.Array     # [M]
+    rate_true: jax.Array      # [M, N] bps
+    rate_est: jax.Array       # [M, N] bps (±csi_error)
+    capacity: jax.Array       # [N] available fraction (observed)
+    cmp_true: jax.Array       # [N, L] realized per-exit seconds (jitter/capacity applied)
+    cmp_est: jax.Array        # [N, L] estimated per-exit seconds (capacity applied)
+    connect: jax.Array        # [M, N] 1.0 if link up
+    active: jax.Array         # [M] 1.0 if the device generates a task this slot
+
+
+class SlotResult(NamedTuple):
+    reward: jax.Array        # scalar Q(G_k, x_k)
+    t_total: jax.Array       # [M] completion time (Eq 8)
+    success: jax.Array       # [M] bool, t_total <= deadline  (Eq 11)
+    accuracy: jax.Array      # [M] φ of the chosen exit
+    t_com: jax.Array         # [M]
+    t_wait: jax.Array        # [M]
+    t_cmp: jax.Array         # [M]
+
+
+def _arrays(cfg: MECConfig):
+    return (jnp.asarray(cfg.exit_times(), jnp.float32),
+            jnp.asarray(cfg.accuracies(), jnp.float32))
+
+
+class MECEnv:
+    """Stateless-core environment; state is threaded explicitly."""
+
+    def __init__(self, cfg: MECConfig):
+        self.cfg = cfg
+        self.exit_times, self.exit_acc = _arrays(cfg)
+        self.M, self.N, self.L = cfg.n_devices, cfg.n_servers, cfg.n_exits
+
+    # ------------------------------------------------------------------ state
+    def reset(self) -> MECState:
+        return MECState(
+            dev_free=jnp.zeros((self.M,), jnp.float32),
+            es_free=jnp.zeros((self.N,), jnp.float32),
+            slot=jnp.zeros((), jnp.int32),
+        )
+
+    # ------------------------------------------------------------- task draws
+    @functools.partial(jax.jit, static_argnums=0)
+    def sample_slot(self, key: jax.Array) -> SlotTasks:
+        cfg = self.cfg
+        ks = jax.random.split(key, 7)
+        kb_lo, kb_hi = cfg.task_kbytes
+        size_bits = jax.random.uniform(ks[0], (self.M,), minval=kb_lo, maxval=kb_hi) \
+            * 8e3  # KBytes -> bits
+        r_lo, r_hi = cfg.rate_mbps
+        rate_true = jax.random.uniform(ks[1], (self.M, self.N),
+                                       minval=r_lo, maxval=r_hi) * 1e6
+        eps = jax.random.uniform(ks[2], (self.M, self.N),
+                                 minval=-cfg.csi_error, maxval=cfg.csi_error)
+        rate_est = rate_true * (1.0 + eps)
+        c_lo, c_hi = cfg.capacity_range
+        capacity = jax.random.uniform(ks[3], (self.N,), minval=c_lo, maxval=c_hi)
+        jit = jax.random.uniform(ks[4], (self.N, self.L),
+                                 minval=-cfg.inference_jitter,
+                                 maxval=cfg.inference_jitter)
+        cmp_base = self.exit_times / capacity[:, None]
+        cmp_true = cmp_base * (1.0 + jit)
+        connect = (jax.random.uniform(ks[5], (self.M, self.N))
+                   >= cfg.connectivity_drop).astype(jnp.float32)
+        # never let a device lose every link
+        has_link = connect.sum(-1, keepdims=True) > 0
+        connect = jnp.where(has_link, connect,
+                            jnp.ones_like(connect))
+        active = jnp.ones((self.M,), jnp.float32)
+        deadline = jnp.full((self.M,), cfg.deadline_s, jnp.float32)
+        return SlotTasks(size_bits, deadline, rate_true, rate_est,
+                         capacity, cmp_true, cmp_base, connect, active)
+
+    # ------------------------------------------------------------ core physics
+    def _simulate(self, state: MECState, tasks: SlotTasks, decision: jax.Array,
+                  *, realized: bool):
+        """Run one slot's queueing physics for a decision [M] in [0, N*L).
+
+        Returns SlotResult plus the end-of-slot (dev_free, es_free).
+        """
+        cfg = self.cfg
+        n_idx = decision // self.L            # [M] chosen ES
+        l_idx = decision % self.L             # [M] chosen exit
+        rate = tasks.rate_true if realized else tasks.rate_est
+        cmp_tab = tasks.cmp_true if realized else tasks.cmp_est
+
+        gen_time = state.slot.astype(jnp.float32) * cfg.slot_s  # (k-1)τ
+        r_sel = jnp.take_along_axis(rate, n_idx[:, None], axis=1)[:, 0]
+        t_com = tasks.size_bits / jnp.maximum(r_sel, 1.0)       # Eq (1)
+        # Eq (6): device transmits sequentially; new task starts after the
+        # previous transmission and not before its own generation instant.
+        start_tx = jnp.maximum(state.dev_free, gen_time)
+        arrival = start_tx + t_com
+        t_cmp = cmp_tab[n_idx, l_idx]                            # Eq (4)
+
+        # Inactive devices (dynamic-M scenarios) occupy no resources.
+        act = tasks.active > 0.5
+        arrival_eff = jnp.where(act, arrival, jnp.inf)
+        t_cmp_eff = jnp.where(act, t_cmp, 0.0)
+
+        # Eqs (6)-(7): per-ES FCFS. Sort by (server, arrival), scan busy[N].
+        order = jnp.lexsort((arrival_eff, n_idx))
+        srv_sorted = n_idx[order]
+        arr_sorted = arrival_eff[order]
+        cmp_sorted = t_cmp_eff[order]
+
+        def fcfs(busy, inp):
+            srv, arr, dur = inp
+            start = jnp.maximum(arr, busy[srv])
+            done = jnp.where(jnp.isinf(arr), busy[srv], start + dur)
+            return busy.at[srv].set(done), (start, done)
+
+        busy0 = state.es_free
+        busy_final, (start_sorted, done_sorted) = jax.lax.scan(
+            fcfs, busy0, (srv_sorted, arr_sorted, cmp_sorted))
+        inv = jnp.argsort(order)
+        start_srv = start_sorted[inv]
+        t_wait = jnp.where(act, start_srv - arrival, 0.0)        # Eq (7)
+        t_total = t_com + t_wait + t_cmp                          # Eq (8)
+
+        phi = self.exit_acc[l_idx]                                # Eq (5)
+        # links that are down make the task infeasible
+        link = jnp.take_along_axis(tasks.connect, n_idx[:, None], axis=1)[:, 0]
+        t_total = jnp.where(link > 0.5, t_total, jnp.inf)
+
+        psi = 1.0 - jax.nn.sigmoid(5.0 * t_total / tasks.deadline_s)
+        psi = jnp.where(jnp.isinf(t_total), 0.0, psi)
+        reward = jnp.sum(jnp.where(act, phi * psi, 0.0))          # Eq (9)
+        success = act & (t_total <= tasks.deadline_s)             # Eq (11)
+
+        new_dev_free = jnp.where(act & (link > 0.5), arrival, state.dev_free)
+        result = SlotResult(reward, t_total, success, phi, t_com, t_wait, t_cmp)
+        return result, (new_dev_free, busy_final)
+
+    # ------------------------------------------------------------- public API
+    @functools.partial(jax.jit, static_argnums=0)
+    def evaluate(self, state: MECState, tasks: SlotTasks,
+                 decisions: jax.Array) -> jax.Array:
+        """Reward Q for a batch of candidate decisions [S, M] (Eq 15 critic).
+
+        Uses *estimated* quantities — this is the information the scheduler
+        actually has when choosing.
+        """
+        def one(d):
+            res, _ = self._simulate(state, tasks, d, realized=False)
+            return res.reward
+
+        return jax.vmap(one)(decisions)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def step(self, state: MECState, tasks: SlotTasks, decision: jax.Array):
+        """Realize decision [M]; returns (new_state, SlotResult)."""
+        result, (dev_free, es_free) = self._simulate(
+            state, tasks, decision, realized=True)
+        new_state = MECState(dev_free=dev_free, es_free=es_free,
+                             slot=state.slot + 1)
+        return new_state, result
+
+    # ------------------------------------------------------------ observation
+    @functools.partial(jax.jit, static_argnums=0)
+    def observe(self, state: MECState, tasks: SlotTasks):
+        """Feature views used by the agents (normalized, estimate-side).
+
+        Returns dict with:
+          device  [M, Fd]  — task size, deadline, best/mean rate, tx backlog
+          option  [N*L, Fo] — est compute time, accuracy, ES backlog, capacity
+          edge_rate [M, N]  — normalized rate estimate per link
+          connect [M, N]
+        """
+        cfg = self.cfg
+        gen_time = state.slot.astype(jnp.float32) * cfg.slot_s
+        d_norm = tasks.size_bits / (cfg.task_kbytes[1] * 8e3)
+        dl_norm = tasks.deadline_s / cfg.deadline_s
+        r_norm = tasks.rate_est / (cfg.rate_mbps[1] * 1e6)
+        r_norm = r_norm * tasks.connect
+        # log-compress queue backlogs: under overload they grow to many
+        # multiples of the deadline and would otherwise saturate the GCN
+        backlog_dev = jnp.log1p(
+            jnp.maximum(state.dev_free - gen_time, 0.0) / cfg.deadline_s)
+        device = jnp.stack(
+            [d_norm, dl_norm, r_norm.mean(-1), r_norm.max(-1), backlog_dev,
+             tasks.active], axis=-1)
+
+        cmp_norm = tasks.cmp_est / cfg.deadline_s                 # [N, L]
+        backlog_es = jnp.log1p(
+            jnp.maximum(state.es_free - gen_time, 0.0) / cfg.deadline_s)
+        acc = jnp.broadcast_to(self.exit_acc[None, :], (self.N, self.L))
+        option = jnp.stack(
+            [cmp_norm,
+             acc,
+             jnp.broadcast_to(backlog_es[:, None], (self.N, self.L)),
+             jnp.broadcast_to(tasks.capacity[:, None], (self.N, self.L))],
+            axis=-1).reshape(self.N * self.L, 4)
+        return {"device": device, "option": option,
+                "edge_rate": r_norm, "connect": tasks.connect}
+
+    # ----------------------------------------------------------------- oracle
+    def greedy_decision(self, state: MECState, tasks: SlotTasks,
+                        *, sweeps: int = 2, early_exit: bool = True) -> jax.Array:
+        """Sequential-greedy + local-search oracle (DESIGN.md §5).
+
+        Initializes every device to its myopically best option, then performs
+        coordinate-ascent sweeps re-optimizing one device at a time against
+        the current joint decision. Used for the Fig-4 normalization x'_k.
+        """
+        n_opt = self.N * self.L
+        options = np.arange(n_opt)
+        if not early_exit:
+            options = options[options % self.L == self.L - 1]
+
+        decision = jnp.full((self.M,), int(options[0]), jnp.int32)
+
+        def best_for_device(decision, m):
+            cands = jnp.tile(decision[None, :], (len(options), 1))
+            cands = cands.at[:, m].set(jnp.asarray(options, jnp.int32))
+            q = self.evaluate(state, tasks, cands)
+            return cands[jnp.argmax(q)]
+
+        for _ in range(sweeps):
+            for m in range(self.M):
+                decision = best_for_device(decision, m)
+        return decision
+
+    def exhaustive_decision(self, state: MECState, tasks: SlotTasks,
+                            *, early_exit: bool = True) -> jax.Array:
+        """True exhaustive search — only feasible for tiny M (tests)."""
+        n_opt = self.N * self.L
+        options = np.arange(n_opt)
+        if not early_exit:
+            options = options[options % self.L == self.L - 1]
+        grids = np.meshgrid(*([options] * self.M), indexing="ij")
+        cands = jnp.asarray(np.stack([g.reshape(-1) for g in grids], axis=-1),
+                            jnp.int32)
+        q = []
+        chunk = 4096
+        for i in range(0, cands.shape[0], chunk):
+            q.append(self.evaluate(state, tasks, cands[i:i + chunk]))
+        q = jnp.concatenate(q)
+        return cands[jnp.argmax(q)]

@@ -1,0 +1,38 @@
+"""Named experiment scenarios — one per paper figure (§VI-D)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.mec.config import MECConfig
+
+
+def make_scenario(name: str, *, n_devices: int = 14, slot_ms: float = 30.0,
+                  early_exit: bool = True, **overrides) -> MECConfig:
+    base = dict(n_devices=n_devices, slot_s=slot_ms * 1e-3, early_exit=early_exit)
+    base.update(SCENARIOS[name])
+    base.update(overrides)
+    return MECConfig(**base)
+
+
+# Fig 5: ideal ESs. Fig 6: stochastic capacity 25..100%. Fig 7: + ±25%
+# inference-time jitter. Fig 8: + ±20% CSI error.
+SCENARIOS = {
+    "fig5_baseline": dict(),
+    "fig6_capacity": dict(capacity_range=(0.25, 1.0)),
+    "fig7_jitter": dict(capacity_range=(0.25, 1.0), inference_jitter=0.25),
+    "fig8_csi": dict(capacity_range=(0.25, 1.0), inference_jitter=0.25,
+                     csi_error=0.20),
+    # extra (beyond-paper) stressor: dynamic topology
+    "dyn_topology": dict(capacity_range=(0.25, 1.0), inference_jitter=0.25,
+                         csi_error=0.20, connectivity_drop=0.15),
+}
+
+
+def scenario_grid(names=None, device_counts=(6, 8, 10, 12, 14),
+                  slot_lengths_ms=(10.0, 30.0)):
+    """The benchmark sweep used by Figs 5-8."""
+    names = names or list(SCENARIOS)
+    for name in names:
+        for m in device_counts:
+            for tau in slot_lengths_ms:
+                yield name, m, tau

@@ -1,0 +1,7 @@
+from repro.models.config import ArchConfig, ShapeSpec, INPUT_SHAPES
+from repro.models.lm import DecoderLM, EncDecLM, model_for, build_plan
+
+__all__ = [
+    "ArchConfig", "ShapeSpec", "INPUT_SHAPES",
+    "DecoderLM", "EncDecLM", "model_for", "build_plan",
+]

@@ -1,0 +1,266 @@
+"""Attention variants: GQA (RoPE, optional sliding window) and MLA.
+
+Pure-jnp reference paths — these are what the dry-run lowers. Long
+sequences use a query-chunked attention (``sdpa``) so the [Sq, Sk] logits
+tensor never materializes beyond [chunk, Sk] — the jnp analogue of the
+flash tiling that ``repro.kernels.flash_attention`` implements for TPU
+VMEM. Kernels are validated against these references in tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.rope import apply_rope
+from repro.nn import Linear
+
+_NEG = -1e30
+_Q_CHUNK = 1024
+
+
+def sdpa(q, k, v, q_pos, k_pos, *, scale: float, causal: bool = True,
+         window: Optional[int] = None, chunk: int = _Q_CHUNK):
+    """Grouped-query attention with query chunking.
+
+    q [B,Sq,H,Dk], k [B,Sk,KVH,Dk], v [B,Sk,KVH,Dv], H % KVH == 0.
+    q_pos [B,Sq], k_pos [B,Sk] absolute positions (mask computed on the fly,
+    never materialized at [Sq,Sk]).
+    """
+    b, sq, h, dk = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[-1]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dk)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def attend(q_blk, qp_blk):
+        # q_blk [b, c, kvh, g, dk]; qp_blk [b, c]
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32),
+                            kf) * scale
+        ok = jnp.ones((b, qp_blk.shape[1], kf.shape[1]), bool)
+        if causal:
+            ok &= k_pos[:, None, :] <= qp_blk[:, :, None]
+        if window is not None:
+            ok &= (qp_blk[:, :, None] - k_pos[:, None, :]) < window
+        logits = logits + jnp.where(ok, 0.0, _NEG)[:, None, None, :, :]
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bkgqs,bskd->bqkgd", probs, vf)
+
+    if sq % chunk:   # non-power-of-two lengths (e.g. whisper's 1500 frames)
+        chunk = next(c for c in range(min(chunk, sq), 0, -1) if sq % c == 0)
+    if sq <= chunk:
+        out = attend(qg, q_pos)
+    else:
+        nb = sq // chunk
+        q_blocks = jnp.moveaxis(qg.reshape(b, nb, chunk, kvh, g, dk), 1, 0)
+        qp_blocks = jnp.moveaxis(q_pos.reshape(b, nb, chunk), 1, 0)
+        out = jax.lax.map(lambda args: attend(*args), (q_blocks, qp_blocks))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, sq, kvh, g, dv)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def _write_cache(buf, new, slot):
+    """Write new [B, 1, ...] into buf [B, S, ...] at per-batch slot [B]."""
+    return jax.vmap(
+        lambda bb, nn, ss: jax.lax.dynamic_update_slice_in_dim(
+            bb, nn, ss, axis=0))(buf, new, slot.astype(jnp.int32))
+
+
+# ----------------------------------------------------------------------- GQA
+class GQACache(NamedTuple):
+    k: jax.Array      # [B, S_cache, KVH, hd]
+    v: jax.Array
+
+
+class GQAAttention:
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype=None):
+        dtype = dtype or cfg.jnp_dtype
+        hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        ks = jax.random.split(key, 4)
+        bias = cfg.qkv_bias
+        return {
+            "wq": Linear.init(ks[0], cfg.d_model, h * hd, use_bias=bias, dtype=dtype),
+            "wk": Linear.init(ks[1], cfg.d_model, kvh * hd, use_bias=bias, dtype=dtype),
+            "wv": Linear.init(ks[2], cfg.d_model, kvh * hd, use_bias=bias, dtype=dtype),
+            "wo": Linear.init(ks[3], h * hd, cfg.d_model, use_bias=False, dtype=dtype),
+        }
+
+    @staticmethod
+    def _qkv(params, cfg: ArchConfig, x, positions):
+        b, s, _ = x.shape
+        q = Linear.apply(params["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = Linear.apply(params["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = Linear.apply(params["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        return q, k, v
+
+    @staticmethod
+    def apply_dense(params, cfg: ArchConfig, x, positions):
+        """Full-sequence causal attention (train / prefill)."""
+        q, k, v = GQAAttention._qkv(params, cfg, x, positions)
+        out = sdpa(q, k, v, positions, positions,
+                   scale=1.0 / math.sqrt(cfg.head_dim), causal=True,
+                   window=cfg.window)
+        b, s = x.shape[:2]
+        return Linear.apply(params["wo"], out.reshape(b, s, -1))
+
+    @staticmethod
+    def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
+        dtype = dtype or cfg.jnp_dtype
+        length = min(seq_len, cfg.window) if cfg.window else seq_len
+        shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+        return GQACache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    @staticmethod
+    def apply_decode(params, cfg: ArchConfig, x, cache: GQACache, pos):
+        """One new token vs. the cache. x [B,1,d], pos [B] absolute position.
+
+        With ``cfg.window`` the cache is a ring buffer of ``window`` slots
+        (sub-quadratic long-context decode, DESIGN.md §4); otherwise a full
+        [seq_len] buffer written at ``pos``.
+        """
+        b = x.shape[0]
+        q, k_new, v_new = GQAAttention._qkv(params, cfg, x, pos[:, None])
+        length = cache.k.shape[1]
+        slot = pos % length
+        k = _write_cache(cache.k, k_new, slot)
+        v = _write_cache(cache.v, v_new, slot)
+        idx = jnp.arange(length)[None, :]
+        if cfg.window and length < cfg.window + 1:
+            # ring buffer: recover absolute position of each slot
+            base = pos[:, None] - slot[:, None]
+            k_pos = jnp.where(idx <= slot[:, None], base + idx,
+                              base + idx - length)
+        else:
+            k_pos = jnp.broadcast_to(idx, (b, length))
+        out = sdpa(q, k, v, pos[:, None], k_pos,
+                   scale=1.0 / math.sqrt(cfg.head_dim), causal=True,
+                   window=cfg.window)
+        y = Linear.apply(params["wo"], out.reshape(b, 1, -1))
+        return y, GQACache(k, v)
+
+
+# ----------------------------------------------------------------------- MLA
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # [B, S, kv_lora_rank]
+    k_pe: jax.Array    # [B, S, rope_head_dim]
+
+
+class MLAAttention:
+    """Multi-head Latent Attention (DeepSeek-V2) with decode-time weight
+    absorption: the cache holds only the rank-512 latent + shared RoPE key."""
+
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype=None):
+        dtype = dtype or cfg.jnp_dtype
+        h = cfg.n_heads
+        r, dn, dr, dv = (cfg.kv_lora_rank, cfg.nope_head_dim,
+                         cfg.rope_head_dim, cfg.v_head_dim)
+        ks = jax.random.split(key, 6)
+        return {
+            "wq": Linear.init(ks[0], cfg.d_model, h * (dn + dr),
+                              use_bias=False, dtype=dtype),
+            "w_dkv": Linear.init(ks[1], cfg.d_model, r, use_bias=False, dtype=dtype),
+            "w_kpe": Linear.init(ks[2], cfg.d_model, dr, use_bias=False, dtype=dtype),
+            "w_uk": jax.random.normal(ks[3], (r, h, dn), dtype) * 0.02,
+            "w_uv": jax.random.normal(ks[4], (r, h, dv), dtype) * 0.02,
+            "wo": Linear.init(ks[5], h * dv, cfg.d_model, use_bias=False, dtype=dtype),
+        }
+
+    @staticmethod
+    def _latents(params, cfg, x, positions):
+        c_kv = Linear.apply(params["w_dkv"], x)                 # [B,S,r]
+        k_pe = Linear.apply(params["w_kpe"], x)[:, :, None, :]  # [B,S,1,dr]
+        k_pe = apply_rope(k_pe, positions, cfg.rope_theta)[:, :, 0, :]
+        return c_kv, k_pe
+
+    @staticmethod
+    def _queries(params, cfg, x, positions):
+        b, s, _ = x.shape
+        dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+        q = Linear.apply(params["wq"], x).reshape(b, s, cfg.n_heads, dn + dr)
+        q_nope, q_pe = q[..., :dn], q[..., dn:]
+        q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+        return q_nope, q_pe
+
+    @staticmethod
+    def apply_dense(params, cfg: ArchConfig, x, positions):
+        """Train/prefill: materialize per-head K/V, run as MHA with
+        concatenated (nope ‖ rope) key/query dims."""
+        b, s, _ = x.shape
+        q_nope, q_pe = MLAAttention._queries(params, cfg, x, positions)
+        c_kv, k_pe = MLAAttention._latents(params, cfg, x, positions)
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, params["w_uk"])
+        v = jnp.einsum("bsr,rhd->bshd", c_kv, params["w_uv"])
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :],
+                                  (b, s, cfg.n_heads, cfg.rope_head_dim))
+        k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+        scale = 1.0 / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+        out = sdpa(q, k, v, positions, positions, scale=scale, causal=True,
+                   window=cfg.window)
+        return Linear.apply(params["wo"], out.reshape(b, s, -1))
+
+    @staticmethod
+    def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
+        dtype = dtype or cfg.jnp_dtype
+        return MLACache(
+            jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+            jnp.zeros((batch, seq_len, cfg.rope_head_dim), dtype),
+        )
+
+    @staticmethod
+    def apply_decode(params, cfg: ArchConfig, x, cache: MLACache, pos):
+        """Absorbed decode: score directly in latent space (cache = r+dr)."""
+        b = x.shape[0]
+        q_nope, q_pe = MLAAttention._queries(params, cfg, x, pos[:, None])
+        c_new, kpe_new = MLAAttention._latents(params, cfg, x, pos[:, None])
+        c_kv = _write_cache(cache.c_kv, c_new, pos)
+        k_pe = _write_cache(cache.k_pe, kpe_new, pos)
+        # absorb W_uk into the query: q_c [B,1,H,r]
+        q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, params["w_uk"])
+        scale = 1.0 / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+        logits = (jnp.einsum("bqhr,bsr->bhqs", q_c.astype(jnp.float32),
+                             c_kv.astype(jnp.float32))
+                  + jnp.einsum("bqhd,bsd->bhqs", q_pe.astype(jnp.float32),
+                               k_pe.astype(jnp.float32))) * scale
+        s_len = c_kv.shape[1]
+        valid = jnp.arange(s_len)[None, :] <= pos[:, None]
+        logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx,
+                         params["w_uv"].astype(jnp.float32)).astype(x.dtype)
+        y = Linear.apply(params["wo"], out.reshape(b, 1, -1))
+        return y, MLACache(c_kv, k_pe)
+
+
+# -------------------------------------------------- cross-attention (Whisper)
+class CrossAttention:
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype=None):
+        return GQAAttention.init(key, cfg, dtype)
+
+    @staticmethod
+    def apply(params, cfg: ArchConfig, x, enc_out):
+        """x [B,Sq,d] attends to enc_out [B,Se,d] (no causal mask, no rope)."""
+        b, sq, _ = x.shape
+        se = enc_out.shape[1]
+        q = Linear.apply(params["wq"], x).reshape(b, sq, cfg.n_heads, cfg.head_dim)
+        k = Linear.apply(params["wk"], enc_out).reshape(
+            b, se, cfg.n_kv_heads, cfg.head_dim)
+        v = Linear.apply(params["wv"], enc_out).reshape(
+            b, se, cfg.n_kv_heads, cfg.head_dim)
+        q_pos = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+        k_pos = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+        out = sdpa(q, k, v, q_pos, k_pos,
+                   scale=1.0 / math.sqrt(cfg.head_dim), causal=False)
+        return Linear.apply(params["wo"], out.reshape(b, sq, -1))

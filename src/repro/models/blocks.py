@@ -1,0 +1,275 @@
+"""Residual blocks for every assigned family, in a scan-friendly form.
+
+Each family provides (init, apply_dense, apply_decode) where `apply_dense`
+handles train/prefill over a full sequence and `apply_decode` consumes one
+token plus per-layer recurrent state / KV cache. Layer parameters are
+stacked (leading L axis) and driven by ``jax.lax.scan`` in repro.models.lm —
+one compiled block body regardless of depth, which keeps 40-combo dry-run
+compile times sane (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    CrossAttention,
+    GQAAttention,
+    GQACache,
+    MLAAttention,
+    MLACache,
+)
+from repro.models.config import ArchConfig
+from repro.models.ffn import DenseFFN, MoEFFN, MoEMetrics
+from repro.models.ssm import Mamba2Block, MambaState, RWKV6Block, RWKVState
+from repro.nn import RMSNorm
+from repro.sharding.runtime import constrain_activations as _sp
+
+
+class BlockAux(NamedTuple):
+    moe_aux: jax.Array
+    moe_dropped: jax.Array
+
+
+ZERO_AUX = BlockAux(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+
+def _ffn_init(key, cfg: ArchConfig, layer_idx: int | None = None):
+    if cfg.is_moe:
+        return MoEFFN.init(key, cfg)
+    return DenseFFN.init(key, cfg.d_model, cfg.d_ff, dtype=cfg.jnp_dtype)
+
+
+def _ffn_apply(params, cfg: ArchConfig, x, dense_override: bool = False):
+    if cfg.is_moe and not dense_override:
+        y, metrics = MoEFFN.apply(params, cfg, x)
+        return y, BlockAux(metrics.aux_loss, metrics.dropped_frac)
+    return DenseFFN.apply(params, x), ZERO_AUX
+
+
+# ------------------------------------------------------------ attention block
+class AttnBlock:
+    """Pre-norm attention + FFN (dense or MoE). Covers dense/moe/vlm."""
+
+    @staticmethod
+    def init(key, cfg: ArchConfig):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        attn_cls = MLAAttention if cfg.attn_kind == "mla" else GQAAttention
+        return {
+            "ln1": RMSNorm.init(k1, cfg.d_model, dtype=cfg.jnp_dtype),
+            "attn": attn_cls.init(k2, cfg),
+            "ln2": RMSNorm.init(k3, cfg.d_model, dtype=cfg.jnp_dtype),
+            "ffn": _ffn_init(k4, cfg),
+        }
+
+    @staticmethod
+    def apply_dense(params, cfg: ArchConfig, x, positions, *,
+                    want_cache: bool = False):
+        attn_cls = MLAAttention if cfg.attn_kind == "mla" else GQAAttention
+        h = RMSNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        # OPT-3: constraining the row-parallel output to sequence sharding
+        # lets the partitioner emit reduce-scatter instead of all-reduce
+        x = x + _sp(attn_cls.apply_dense(params["attn"], cfg, h, positions))
+        h = RMSNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        y, aux = _ffn_apply(params["ffn"], cfg, h)
+        x = x + _sp(y)
+        cache = None
+        if want_cache:
+            cache = AttnBlock.prefill_cache(params, cfg, h, positions)
+        return x, cache, aux
+
+    @staticmethod
+    def prefill_cache(params, cfg: ArchConfig, h_ln1, positions):
+        """Recompute K/V (or latents) of the prefilled tokens as the cache."""
+        if cfg.attn_kind == "mla":
+            c_kv, k_pe = MLAAttention._latents(params["attn"], cfg, h_ln1,
+                                               positions)
+            return MLACache(c_kv, k_pe)
+        _, k, v = GQAAttention._qkv(params["attn"], cfg, h_ln1, positions)
+        if cfg.window and k.shape[1] > cfg.window:
+            k, v = k[:, -cfg.window:], v[:, -cfg.window:]
+        return GQACache(k, v)
+
+    @staticmethod
+    def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+        attn_cls = MLAAttention if cfg.attn_kind == "mla" else GQAAttention
+        return attn_cls.init_cache(cfg, batch, seq_len)
+
+    @staticmethod
+    def apply_decode(params, cfg: ArchConfig, x, cache, pos):
+        attn_cls = MLAAttention if cfg.attn_kind == "mla" else GQAAttention
+        h = RMSNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        y, cache = attn_cls.apply_decode(params["attn"], cfg, h, cache, pos)
+        x = x + y
+        h = RMSNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        y, aux = _ffn_apply(params["ffn"], cfg, h)
+        return x + y, cache, aux
+
+
+# ----------------------------------------------------------------- RWKV block
+class RWKVBlockWrap:
+    @staticmethod
+    def init(key, cfg: ArchConfig):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": RMSNorm.init(k1, cfg.d_model, dtype=cfg.jnp_dtype),
+            "core": RWKV6Block.init(k2, cfg),
+            "ln2": RMSNorm.init(k3, cfg.d_model, dtype=cfg.jnp_dtype),
+        }
+
+    @staticmethod
+    def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> RWKVState:
+        del seq_len
+        return RWKV6Block.init_state(cfg, batch)
+
+    @staticmethod
+    def apply_dense(params, cfg: ArchConfig, x, positions, *,
+                    want_cache: bool = False):
+        del positions
+        h = RMSNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        y, wkv, last_tm = RWKV6Block.time_mix(params["core"], cfg, h, None)
+        x = x + _sp(y)
+        h2 = RMSNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        x = x + _sp(RWKV6Block.channel_mix(params["core"], h2))
+        cache = RWKVState(wkv, last_tm, h2[:, -1]) if want_cache else None
+        return x, cache, ZERO_AUX
+
+    @staticmethod
+    def apply_decode(params, cfg: ArchConfig, x, state: RWKVState, pos):
+        del pos
+        h = RMSNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        y, state = RWKV6Block.apply_decode(params["core"], cfg, h, state)
+        x = x + y
+        h2 = RMSNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        y = RWKV6Block.channel_mix(params["core"], h2,
+                                   x_prev_last=state.shift_cm)
+        state = RWKVState(state.wkv, state.shift_tm, h2[:, 0])
+        return x + y, state, ZERO_AUX
+
+
+# ---------------------------------------------------------------- Mamba block
+class MambaBlockWrap:
+    @staticmethod
+    def init(key, cfg: ArchConfig):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln": RMSNorm.init(k1, cfg.d_model, dtype=cfg.jnp_dtype),
+            "core": Mamba2Block.init(k2, cfg),
+        }
+
+    @staticmethod
+    def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> MambaState:
+        del seq_len
+        return Mamba2Block.init_state(cfg, batch)
+
+    @staticmethod
+    def apply_dense(params, cfg: ArchConfig, x, positions, *,
+                    want_cache: bool = False):
+        del positions
+        h = RMSNorm.apply(params["ln"], x, eps=cfg.norm_eps)
+        y, state = Mamba2Block.apply_dense(params["core"], cfg, h)
+        return x + y, (state if want_cache else None), ZERO_AUX
+
+    @staticmethod
+    def apply_decode(params, cfg: ArchConfig, x, state: MambaState, pos):
+        del pos
+        h = RMSNorm.apply(params["ln"], x, eps=cfg.norm_eps)
+        y, state = Mamba2Block.apply_decode(params["core"], cfg, h, state)
+        return x + y, state, ZERO_AUX
+
+
+# -------------------------------------------------------- Whisper decoder blk
+class EncDecBlock:
+    """Decoder block with self-attention, cross-attention and FFN."""
+
+    @staticmethod
+    def init(key, cfg: ArchConfig):
+        ks = jax.random.split(key, 6)
+        return {
+            "ln1": RMSNorm.init(ks[0], cfg.d_model, dtype=cfg.jnp_dtype),
+            "self": GQAAttention.init(ks[1], cfg),
+            "ln_x": RMSNorm.init(ks[2], cfg.d_model, dtype=cfg.jnp_dtype),
+            "cross": CrossAttention.init(ks[3], cfg),
+            "ln2": RMSNorm.init(ks[4], cfg.d_model, dtype=cfg.jnp_dtype),
+            "ffn": _ffn_init(ks[5], cfg),
+        }
+
+    @staticmethod
+    def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+        return GQAAttention.init_cache(cfg, batch, seq_len)
+
+    @staticmethod
+    def apply_dense(params, cfg: ArchConfig, x, positions, enc_out, *,
+                    want_cache: bool = False):
+        h = RMSNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        x = x + GQAAttention.apply_dense(params["self"], cfg, h, positions)
+        hx = RMSNorm.apply(params["ln_x"], x, eps=cfg.norm_eps)
+        x = x + CrossAttention.apply(params["cross"], cfg, hx, enc_out)
+        h2 = RMSNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        y, aux = _ffn_apply(params["ffn"], cfg, h2)
+        cache = None
+        if want_cache:
+            cache = AttnBlock.prefill_cache({"attn": params["self"]}, cfg, h,
+                                            positions)
+        return x + y, cache, aux
+
+    @staticmethod
+    def apply_decode(params, cfg: ArchConfig, x, cache, pos, enc_out):
+        h = RMSNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        y, cache = GQAAttention.apply_decode(params["self"], cfg, h, cache, pos)
+        x = x + y
+        hx = RMSNorm.apply(params["ln_x"], x, eps=cfg.norm_eps)
+        x = x + CrossAttention.apply(params["cross"], cfg, hx, enc_out)
+        h2 = RMSNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        y, aux = _ffn_apply(params["ffn"], cfg, h2)
+        return x + y, cache, aux
+
+
+# ------------------------------------------------------------- encoder block
+class EncoderBlock:
+    @staticmethod
+    def init(key, cfg: ArchConfig):
+        ks = jax.random.split(key, 4)
+        return {
+            "ln1": RMSNorm.init(ks[0], cfg.d_model, dtype=cfg.jnp_dtype),
+            "attn": GQAAttention.init(ks[1], cfg),
+            "ln2": RMSNorm.init(ks[2], cfg.d_model, dtype=cfg.jnp_dtype),
+            "ffn": DenseFFN.init(ks[3], cfg.d_model, cfg.d_ff,
+                                 dtype=cfg.jnp_dtype),
+        }
+
+    @staticmethod
+    def apply(params, cfg: ArchConfig, x):
+        """Bidirectional (non-causal) attention."""
+        from repro.models.attention import sdpa
+        import math
+        b, s, _ = x.shape
+        h = RMSNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q, k, v = GQAAttention._qkv(params["attn"], cfg, h, pos)
+        out = sdpa(q, k, v, pos, pos, scale=1.0 / math.sqrt(cfg.head_dim),
+                   causal=False)
+        from repro.nn import Linear
+        x = x + Linear.apply(params["attn"]["wo"], out.reshape(b, s, -1))
+        h = RMSNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        return x + DenseFFN.apply(params["ffn"], h)
+
+
+BLOCK_BY_KIND = {
+    "attn": AttnBlock,
+    "rwkv6": RWKVBlockWrap,
+    "mamba2": MambaBlockWrap,
+    "encdec": EncDecBlock,
+}
+
+
+def block_kind(cfg: ArchConfig) -> str:
+    if cfg.enc_layers:
+        return "encdec"
+    if cfg.ssm_kind == "rwkv6":
+        return "rwkv6"
+    if cfg.ssm_kind == "mamba2":
+        return "mamba2"
+    return "attn"

@@ -1,0 +1,130 @@
+"""Feed-forward layers: gated dense MLP and fine-grained MoE.
+
+The MoE uses gather/scatter dispatch with per-group capacity (GShard-style
+token dropping) rather than one-hot dispatch einsums: gathers carry no fake
+FLOPs, so ``cost_analysis`` reflects useful compute only, and both the
+token and expert dimensions partition cleanly ((pod, data) × model) —
+DESIGN.md §6. Routed top-k plus always-on shared experts follow
+DeepSeekMoE (arXiv:2401.06066).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.nn import Linear
+from repro.nn.initializers import normal_init
+
+
+class DenseFFN:
+    """SwiGLU MLP (llama-family)."""
+
+    @staticmethod
+    def init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+        ks = jax.random.split(key, 3)
+        return {
+            "w1": Linear.init(ks[0], d_model, d_ff, use_bias=False, dtype=dtype),
+            "w3": Linear.init(ks[1], d_model, d_ff, use_bias=False, dtype=dtype),
+            "w2": Linear.init(ks[2], d_ff, d_model, use_bias=False, dtype=dtype),
+        }
+
+    @staticmethod
+    def apply(params, x):
+        h = jax.nn.silu(Linear.apply(params["w1"], x)) * Linear.apply(params["w3"], x)
+        return Linear.apply(params["w2"], h)
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jax.Array        # load-balance loss (scalar)
+    dropped_frac: jax.Array    # fraction of token-slots beyond capacity
+
+
+class MoEFFN:
+    """Shared + routed-top-k mixture of experts."""
+
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype=None):
+        dtype = dtype or cfg.jnp_dtype
+        d, m, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+        ks = jax.random.split(key, 5)
+        scale = 1.0 / math.sqrt(d)
+        params = {
+            "router": Linear.init(ks[0], d, e, use_bias=False, dtype=jnp.float32),
+            "w1": normal_init(ks[1], (e, d, m), scale=scale, dtype=dtype),
+            "w3": normal_init(ks[2], (e, d, m), scale=scale, dtype=dtype),
+            "w2": normal_init(ks[3], (e, m, d), scale=1.0 / math.sqrt(m),
+                              dtype=dtype),
+        }
+        if cfg.n_shared_experts:
+            params["shared"] = DenseFFN.init(
+                ks[4], d, cfg.n_shared_experts * m, dtype=dtype)
+        return params
+
+    @staticmethod
+    def apply(params, cfg: ArchConfig, x):
+        """x [B, S, d] -> (y, MoEMetrics). Groups = batch rows; decode
+        (S == 1) regroups all tokens into a single group."""
+        b, s, d = x.shape
+        regroup = s == 1
+        if regroup:
+            x = x.reshape(1, b, d)
+        y, metrics = MoEFFN._routed(params, cfg, x)
+        if "shared" in params:
+            y = y + DenseFFN.apply(params["shared"], x)
+        if regroup:
+            y = y.reshape(b, s, d)
+        return y, metrics
+
+    @staticmethod
+    def _routed(params, cfg: ArchConfig, x):
+        g, t, d = x.shape                       # groups, tokens/group, d_model
+        e, k = cfg.n_experts, cfg.top_k
+        cap = max(1, int(math.ceil(t * k / e * cfg.capacity_factor)))
+        cap = min(cap, t)
+
+        logits = Linear.apply(params["router"], x.astype(jnp.float32))  # [g,t,e]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, k)                 # [g,t,k]
+        # normalize the kept gates (DeepSeekMoE)
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+        # --- slot assignment: rank of each (token, k) within its expert ---
+        # flatten choices k-major so primary choices win capacity ties
+        flat_e = expert_idx.transpose(0, 2, 1).reshape(g, k * t)        # [g,kt]
+        flat_gate = gate_vals.transpose(0, 2, 1).reshape(g, k * t)
+        tok_of = jnp.tile(jnp.arange(t)[None, :], (g, k))               # [g,kt]
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)             # [g,kt,e]
+        pos = jnp.cumsum(onehot, axis=1) - 1                            # rank
+        slot = jnp.take_along_axis(pos, flat_e[..., None], -1)[..., 0]  # [g,kt]
+        keep = slot < cap
+        dropped = 1.0 - keep.mean()
+
+        # --- scatter (token index, gate) into [g, e, cap] tables ---
+        gi = jnp.arange(g)[:, None]
+        slot_c = jnp.where(keep, slot, cap)     # out-of-range -> dropped
+        src = jnp.full((g, e, cap + 1), t, jnp.int32)
+        src = src.at[gi, flat_e, slot_c].set(tok_of, mode="drop")
+        gates = jnp.zeros((g, e, cap + 1), flat_gate.dtype)
+        gates = gates.at[gi, flat_e, slot_c].set(flat_gate, mode="drop")
+        src, gates = src[..., :cap], gates[..., :cap]
+        valid = src < t
+
+        # --- gather -> expert FFN -> weighted scatter-add ---
+        x_pad = jnp.concatenate([x, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+        exp_in = x_pad[gi[..., None], src]                              # [g,e,c,d]
+        h = jnp.einsum("gecd,edm->gecm", exp_in, params["w1"])
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edm->gecm", exp_in, params["w3"])
+        exp_out = jnp.einsum("gecm,emd->gecd", h, params["w2"])
+        exp_out = exp_out * (gates * valid).astype(exp_out.dtype)[..., None]
+        y = jnp.zeros((g, t + 1, d), x.dtype)
+        y = y.at[gi[..., None], src].add(exp_out, mode="drop")[:, :t]
+
+        # --- load-balance aux loss (Switch/DeepSeek form) ---
+        me = probs.mean(axis=(0, 1))                                    # [e]
+        ce = jax.nn.one_hot(expert_idx, e).sum(2).mean(axis=(0, 1)) / k
+        aux = e * jnp.sum(me * ce)
+        return y, MoEMetrics(aux.astype(jnp.float32), dropped)

@@ -1,0 +1,397 @@
+"""Model assembly: decoder LMs (all families) and the Whisper enc-dec.
+
+Layers are stacked on a leading axis and driven by ``lax.scan`` so compile
+time is depth-independent. The layer schedule is segmented by two kinds of
+"events" (DESIGN.md §4):
+
+* early exits — the paper's mechanism: at each exit layer an RMSNorm +
+  (shared) LM head can produce logits; ``serve_step`` compiles a truncated
+  schedule per exit, which is exactly the latency/quality dial GRLE's
+  scheduler controls;
+* Zamba2's shared attention block — one set of attention+MLP weights
+  applied every ``shared_attn_every`` layers (each application has its own
+  KV cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (
+    AttnBlock,
+    BLOCK_BY_KIND,
+    BlockAux,
+    EncDecBlock,
+    EncoderBlock,
+    ZERO_AUX,
+    block_kind,
+)
+from repro.models.config import ArchConfig
+from repro.nn import Embedding, Linear, RMSNorm
+
+
+# ------------------------------------------------------------- layer schedule
+def build_plan(cfg: ArchConfig, up_to_exit: Optional[int] = None):
+    """Ordered events: ('layers', a, b) | ('shared', idx) | ('exit', layer)."""
+    n = cfg.n_layers
+    every = cfg.shared_attn_every
+    shared_marks = set(range(every, n + 1, every)) if every else set()
+    exit_marks = set(cfg.exit_layers)
+    events = []
+    last = 0
+    shared_idx = 0
+    for m in sorted(shared_marks | exit_marks):
+        if m > last:
+            events.append(("layers", last, m))
+            last = m
+        if m in shared_marks:
+            events.append(("shared", shared_idx))
+            shared_idx += 1
+        if m in exit_marks:
+            events.append(("exit", m))
+            if up_to_exit is not None and m == up_to_exit:
+                return events
+    if last < n:
+        events.append(("layers", last, n))
+    return events
+
+
+def n_shared_applications(cfg: ArchConfig) -> int:
+    every = cfg.shared_attn_every
+    return len(range(every, cfg.n_layers + 1, every)) if every else 0
+
+
+def _slice_tree(tree, a, b):
+    return jax.tree_util.tree_map(lambda p: p[a:b], tree)
+
+
+# ---------------------------------------------------------------- decoder LM
+class DecoderLM:
+    @staticmethod
+    def init(key, cfg: ArchConfig):
+        kind = block_kind(cfg)
+        block = BLOCK_BY_KIND[kind]
+        ks = jax.random.split(key, 6)
+        layer_keys = jax.random.split(ks[0], cfg.n_layers)
+        blocks = jax.vmap(lambda k: block.init(k, cfg))(layer_keys)
+        exit_keys = jax.random.split(ks[1], max(len(cfg.exit_layers), 1))
+        params = {
+            "embed": Embedding.init(ks[2], cfg.vocab, cfg.d_model,
+                                    dtype=cfg.jnp_dtype),
+            "blocks": blocks,
+            "final_norm": RMSNorm.init(ks[3], cfg.d_model, dtype=cfg.jnp_dtype),
+            "lm_head": Linear.init(ks[4], cfg.d_model, cfg.vocab,
+                                   use_bias=False, dtype=cfg.jnp_dtype),
+            "exit_norms": jax.vmap(
+                lambda k: RMSNorm.init(k, cfg.d_model, dtype=cfg.jnp_dtype)
+            )(exit_keys),
+        }
+        if cfg.shared_attn_every:
+            params["shared_block"] = AttnBlock.init(ks[5], cfg)
+        return params
+
+    # ------------------------------------------------------------ scan pieces
+    @staticmethod
+    def _run_layers(params_slice, cfg: ArchConfig, x, positions, *,
+                    want_cache: bool, cache_slice=None, pos=None):
+        """Scan a contiguous stack of same-kind layers."""
+        block = BLOCK_BY_KIND[block_kind(cfg)]
+
+        if cache_slice is None:                     # train / prefill
+            from repro.sharding.runtime import constrain_activations
+
+            def body(carry, layer_params):
+                h, aux = carry
+                h, cache, aux_i = block.apply_dense(
+                    layer_params, cfg, h, positions, want_cache=want_cache)
+                h = constrain_activations(h)        # OPT-3 seq-parallel
+                aux = BlockAux(aux.moe_aux + aux_i.moe_aux,
+                               aux.moe_dropped + aux_i.moe_dropped)
+                return (h, aux), cache
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            (x, aux), caches = jax.lax.scan(body, (x, ZERO_AUX), params_slice)
+            return x, aux, caches
+
+        def body(carry, inp):                       # decode
+            h, aux = carry
+            layer_params, cache = inp
+            h, cache, aux_i = block.apply_decode(layer_params, cfg, h, cache,
+                                                 pos)
+            aux = BlockAux(aux.moe_aux + aux_i.moe_aux,
+                           aux.moe_dropped + aux_i.moe_dropped)
+            return (h, aux), cache
+
+        (x, aux), caches = jax.lax.scan(body, (x, ZERO_AUX),
+                                        (params_slice, cache_slice))
+        return x, aux, caches
+
+    @staticmethod
+    def _exit_head(params, cfg: ArchConfig, x, exit_pos: int):
+        idx = cfg.exit_layers.index(exit_pos)
+        norm = _slice_tree(params["exit_norms"], idx, idx + 1)
+        norm = jax.tree_util.tree_map(lambda p: p[0], norm)
+        h = RMSNorm.apply(norm, x, eps=cfg.norm_eps)
+        return h
+
+    # -------------------------------------------------------------- forward
+    @staticmethod
+    def forward_train(params, cfg: ArchConfig, tokens):
+        """tokens [B, S] -> ({exit_layer: normed hidden [B,S,D]}, aux).
+
+        Hidden states (not logits) are returned; the loss computes chunked
+        CE against the shared LM head to avoid materializing [B,S,V].
+        """
+        b, s = tokens.shape
+        x = Embedding.apply(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        aux = ZERO_AUX
+        exit_hiddens = {}
+        for ev in build_plan(cfg):
+            if ev[0] == "layers":
+                x, a2, _ = DecoderLM._run_layers(
+                    _slice_tree(params["blocks"], ev[1], ev[2]), cfg, x,
+                    positions, want_cache=False)
+                aux = BlockAux(aux.moe_aux + a2.moe_aux,
+                               aux.moe_dropped + a2.moe_dropped)
+            elif ev[0] == "shared":
+                x, _, a2 = AttnBlock.apply_dense(
+                    params["shared_block"], cfg, x, positions)
+                aux = BlockAux(aux.moe_aux + a2.moe_aux,
+                               aux.moe_dropped + a2.moe_dropped)
+            else:  # exit
+                if ev[1] == cfg.n_layers:
+                    exit_hiddens[ev[1]] = RMSNorm.apply(
+                        params["final_norm"], x, eps=cfg.norm_eps)
+                else:
+                    exit_hiddens[ev[1]] = DecoderLM._exit_head(
+                        params, cfg, x, ev[1])
+        if cfg.n_layers not in exit_hiddens:
+            exit_hiddens[cfg.n_layers] = RMSNorm.apply(
+                params["final_norm"], x, eps=cfg.norm_eps)
+        return exit_hiddens, aux
+
+    @staticmethod
+    def logits(params, hidden):
+        return Linear.apply(params["lm_head"], hidden)
+
+    # ----------------------------------------------------------------- cache
+    @staticmethod
+    def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+        block = BLOCK_BY_KIND[block_kind(cfg)]
+        one = block.init_cache(cfg, batch, seq_len)
+        cache = {
+            "layers": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.n_layers, *a.shape)).copy(), one),
+        }
+        n_sh = n_shared_applications(cfg)
+        if n_sh:
+            sh = AttnBlock.init_cache(cfg, batch, seq_len)
+            cache["shared"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (n_sh, *a.shape)).copy(),
+                sh)
+        return cache
+
+    # ---------------------------------------------------------------- decode
+    @staticmethod
+    def serve_step(params, cfg: ArchConfig, tokens, cache, pos,
+                   *, exit_layer: Optional[int] = None):
+        """One decode step. tokens [B], pos [B] -> (logits [B, V], cache).
+
+        ``exit_layer`` (static) truncates the schedule — the early-exit
+        serving path the GRLE scheduler drives.
+        """
+        exit_layer = exit_layer or cfg.n_layers
+        b = tokens.shape[0]
+        x = Embedding.apply(params["embed"], tokens[:, None])
+        aux = ZERO_AUX
+        new_layer_caches = []
+        new_shared = cache.get("shared")
+        plan = build_plan(cfg, up_to_exit=exit_layer)
+        ran_to = 0
+        for ev in plan:
+            if ev[0] == "layers":
+                x, _, upd = DecoderLM._run_layers(
+                    _slice_tree(params["blocks"], ev[1], ev[2]), cfg, x,
+                    None, want_cache=False,
+                    cache_slice=_slice_tree(cache["layers"], ev[1], ev[2]),
+                    pos=pos)
+                new_layer_caches.append((ev[1], ev[2], upd))
+                ran_to = ev[2]
+            elif ev[0] == "shared":
+                idx = ev[1]
+                sh_cache = jax.tree_util.tree_map(lambda a: a[idx],
+                                                  cache["shared"])
+                x, sh_cache, _ = AttnBlock.apply_decode(
+                    params["shared_block"], cfg, x, sh_cache, pos)
+                new_shared = jax.tree_util.tree_map(
+                    lambda full, upd: full.at[idx].set(upd), new_shared,
+                    sh_cache)
+            elif ev[1] == exit_layer:       # requested exit reached
+                break
+            # intermediate exit events are pass-through during decode
+        # assemble updated cache (untouched deep layers pass through)
+        layers = cache["layers"]
+        for a, b_, upd in new_layer_caches:
+            layers = jax.tree_util.tree_map(
+                lambda full, u, a=a, b_=b_: jax.lax.dynamic_update_slice_in_dim(
+                    full, u.astype(full.dtype), a, axis=0), layers, upd)
+        out_cache = {"layers": layers}
+        if new_shared is not None:
+            out_cache["shared"] = new_shared
+
+        if exit_layer == cfg.n_layers:
+            h = RMSNorm.apply(params["final_norm"], x, eps=cfg.norm_eps)
+        else:
+            h = DecoderLM._exit_head(params, cfg, x, exit_layer)
+        logits = DecoderLM.logits(params, h)[:, 0]
+        return logits, out_cache
+
+    # --------------------------------------------------------------- prefill
+    @staticmethod
+    def prefill(params, cfg: ArchConfig, tokens):
+        """Full-sequence forward that also returns the filled cache."""
+        b, s = tokens.shape
+        x = Embedding.apply(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        aux = ZERO_AUX
+        layer_caches = []
+        shared_caches = []
+        for ev in build_plan(cfg):
+            if ev[0] == "layers":
+                x, a2, caches = DecoderLM._run_layers(
+                    _slice_tree(params["blocks"], ev[1], ev[2]), cfg, x,
+                    positions, want_cache=True)
+                layer_caches.append(caches)
+                aux = BlockAux(aux.moe_aux + a2.moe_aux,
+                               aux.moe_dropped + a2.moe_dropped)
+            elif ev[0] == "shared":
+                h_ln = RMSNorm.apply(params["shared_block"]["ln1"], x,
+                                     eps=cfg.norm_eps)
+                shared_caches.append(AttnBlock.prefill_cache(
+                    params["shared_block"], cfg, h_ln, positions))
+                x, _, _ = AttnBlock.apply_dense(params["shared_block"], cfg,
+                                                x, positions)
+        h = RMSNorm.apply(params["final_norm"], x, eps=cfg.norm_eps)
+        cache = {"layers": jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *layer_caches)}
+        if shared_caches:
+            cache["shared"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *shared_caches)
+        return h, cache, aux
+
+
+# -------------------------------------------------------------- Whisper-style
+class EncDecLM:
+    """Encoder-decoder over precomputed audio-frame embeddings (frontend is
+    a stub per the assignment: input_specs() supplies [B, frames, d])."""
+
+    @staticmethod
+    def init(key, cfg: ArchConfig):
+        ks = jax.random.split(key, 4)
+        enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+        dec = DecoderLM.init(ks[1], cfg)
+        return {
+            "encoder": jax.vmap(lambda k: EncoderBlock.init(k, cfg))(enc_keys),
+            "enc_norm": RMSNorm.init(ks[2], cfg.d_model, dtype=cfg.jnp_dtype),
+            "decoder": dec,
+        }
+
+    @staticmethod
+    def encode(params, cfg: ArchConfig, audio_embeds):
+        def body(h, layer_params):
+            return EncoderBlock.apply(layer_params, cfg, h), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, audio_embeds, params["encoder"])
+        return RMSNorm.apply(params["enc_norm"], x, eps=cfg.norm_eps)
+
+    @staticmethod
+    def forward_train(params, cfg: ArchConfig, audio_embeds, tokens):
+        enc_out = EncDecLM.encode(params, cfg, audio_embeds)
+        return EncDecLM._decode_dense(params["decoder"], cfg, tokens, enc_out)
+
+    @staticmethod
+    def _decode_dense(dparams, cfg: ArchConfig, tokens, enc_out):
+        b, s = tokens.shape
+        x = Embedding.apply(dparams["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        aux = ZERO_AUX
+        exit_hiddens = {}
+
+        def body(carry, layer_params):
+            h, aux = carry
+            h, _, aux_i = EncDecBlock.apply_dense(layer_params, cfg, h,
+                                                  positions, enc_out)
+            aux = BlockAux(aux.moe_aux + aux_i.moe_aux,
+                           aux.moe_dropped + aux_i.moe_dropped)
+            return (h, aux), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        last = 0
+        for e in cfg.exit_layers:
+            (x, aux), _ = jax.lax.scan(
+                body, (x, aux), _slice_tree(dparams["blocks"], last, e))
+            last = e
+            if e == cfg.n_layers:
+                exit_hiddens[e] = RMSNorm.apply(dparams["final_norm"], x,
+                                                eps=cfg.norm_eps)
+            else:
+                exit_hiddens[e] = DecoderLM._exit_head(dparams, cfg, x, e)
+        if cfg.n_layers not in exit_hiddens:
+            (x, aux), _ = jax.lax.scan(
+                body, (x, aux),
+                _slice_tree(dparams["blocks"], last, cfg.n_layers))
+            exit_hiddens[cfg.n_layers] = RMSNorm.apply(
+                dparams["final_norm"], x, eps=cfg.norm_eps)
+        return exit_hiddens, aux
+
+    @staticmethod
+    def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+        one = EncDecBlock.init_cache(cfg, batch, seq_len)
+        return {
+            "layers": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.n_layers, *a.shape)).copy(), one),
+            "enc_out": jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model),
+                                 cfg.jnp_dtype),
+        }
+
+    @staticmethod
+    def serve_step(params, cfg: ArchConfig, tokens, cache, pos,
+                   *, exit_layer: Optional[int] = None):
+        exit_layer = exit_layer or cfg.n_layers
+        dparams = params["decoder"]
+        enc_out = cache["enc_out"]
+        x = Embedding.apply(dparams["embed"], tokens[:, None])
+
+        def body(carry, inp):
+            h = carry
+            layer_params, c = inp
+            h, c, _ = EncDecBlock.apply_decode(layer_params, cfg, h, c, pos,
+                                               enc_out)
+            return h, c
+
+        x, upd = jax.lax.scan(
+            body, x, (_slice_tree(dparams["blocks"], 0, exit_layer),
+                      _slice_tree(cache["layers"], 0, exit_layer)))
+        layers = jax.tree_util.tree_map(
+            lambda full, u: jax.lax.dynamic_update_slice_in_dim(
+                full, u.astype(full.dtype), 0, axis=0), cache["layers"], upd)
+        if exit_layer == cfg.n_layers:
+            h = RMSNorm.apply(dparams["final_norm"], x, eps=cfg.norm_eps)
+        else:
+            h = DecoderLM._exit_head(dparams, cfg, x, exit_layer)
+        logits = DecoderLM.logits(dparams, h)[:, 0]
+        return logits, {"layers": layers, "enc_out": enc_out}
+
+
+def model_for(cfg: ArchConfig):
+    return EncDecLM if cfg.enc_layers else DecoderLM

@@ -1,0 +1,22 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    return inv                                       # [head_dim // 2]
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                      # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]              # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,408 @@
+"""State-space / linear-attention blocks: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are instances of one primitive — a gated linear recurrence over
+rank-1 state updates:
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t          (state [dk, dv] per head)
+    y_t = q_t · S_(t or t-1)  (+ RWKV's bonus-u current-token term)
+
+``chunked_linear_attn`` evaluates it in the chunked parallel form (the
+standard GLA/SSD scheme): intra-chunk via a decay-weighted [C, C] attention
+matrix on the MXU, inter-chunk via a scanned state. This is also exactly
+what ``repro.kernels.ssm_scan`` implements for TPU; tests check both against
+the naive sequential scan.
+
+Numerics: the q'/k' rescaling is anchored *per 16-step sub-block*, so every
+exponent that feeds ``exp`` is ≤ 0 — overflow is impossible and underflow
+only kills contributions that are genuinely ~e^{-30} or smaller. Diagonal
+sub-blocks are computed exactly in log space (the [U, U, dk] tensor is
+VMEM-sized). No clamping of the decay is needed (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.nn import Linear, RMSNorm
+from repro.nn.initializers import normal_init, zeros_init
+
+SUBBLOCK = 16   # intra-chunk anchoring granularity (all exponents ≤ 0)
+
+
+def _intra_chunk(qb, kb, vb, qe, cumb, *, rwkv: bool, u=None):
+    """Intra-chunk attention output, sub-block anchored.
+
+    qb/kb [b,c,h,dk] f32, vb [b,c,h,dv], qe = q-side log decays (inclusive
+    cum for mamba, exclusive for rwkv), cumb = inclusive cum. All exponents
+    formed here are ≤ 0.
+    """
+    b, c, h, dk = qb.shape
+    uu = min(SUBBLOCK, c)
+    n_sub = c // uu
+    ys = []
+    tri_strict = jnp.tril(jnp.ones((uu, uu), bool), -1)
+    tri_inc = jnp.tril(jnp.ones((uu, uu), bool), 0)
+    for tblk in range(n_sub):
+        sl = slice(tblk * uu, (tblk + 1) * uu)
+        q_t, qe_t = qb[:, sl], qe[:, sl]
+        # --- diagonal sub-block: exact log-space pairs [b,uu,uu,h,dk] ---
+        gap = qe_t[:, :, None] - cumb[:, sl][:, None]      # i,j log decay
+        mask = (tri_strict if rwkv else tri_inc)[None, :, :, None, None]
+        pair = jnp.where(mask, gap, -jnp.inf)
+        a_diag = jnp.einsum("bihd,bijhd,bjhd->bhij", q_t, jnp.exp(pair),
+                            kb[:, sl])
+        if rwkv:
+            diag = jnp.einsum("bihd,hd,bihd->bhi", q_t, u, kb[:, sl])
+            a_diag = a_diag + diag[..., None] * jnp.eye(uu)[None, None]
+        y_t = jnp.einsum("bhij,bjhd->bihd", a_diag, vb[:, sl])
+        # --- earlier sub-blocks: anchored matmuls (factors ≤ 1) ---
+        if tblk > 0:
+            # anchor = exclusive cum at sub-block start = cum[start-1]
+            base = cumb[:, tblk * uu - 1][:, None]          # [b,1,h,dk]
+            q_in = q_t * jnp.exp(qe_t - base)               # ≤ |q|
+            pre = slice(0, tblk * uu)
+            k_in = kb[:, pre] * jnp.exp(base - cumb[:, pre])  # ≤ |k|
+            a_off = jnp.einsum("bihd,bjhd->bhij", q_in, k_in)
+            y_t = y_t + jnp.einsum("bhij,bjhd->bihd", a_off, vb[:, pre])
+        ys.append(y_t)
+    return jnp.concatenate(ys, axis=1)
+
+
+def chunked_linear_attn(q, k, v, log_w, *, chunk: int, bonus_u=None,
+                        initial_state=None):
+    """q,k [B,T,H,dk], v [B,T,H,dv], log_w [B,T,H,dk] (≤ 0).
+
+    bonus_u: None -> Mamba-style (y_t includes the *current* update with no
+    decay: A_ii = q_i·k_i). [H, dk] -> RWKV-style (y_t = q_t·S_{t-1} +
+    q_t·(u ⊙ k_t) v_t).
+    Returns (y [B,T,H,dv], final_state [B,H,dk,dv]).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0, (t, c)
+    nc = t // c
+    rwkv = bonus_u is not None
+    u = None if bonus_u is None else bonus_u.astype(jnp.float32)
+
+    def resh(x):
+        return jnp.moveaxis(
+            x.reshape(b, nc, c, h, x.shape[-1]).astype(jnp.float32), 1, 0)
+
+    qc, kc, vc, wc = resh(q), resh(k), resh(v), resh(log_w)
+    cum = jnp.cumsum(wc, axis=2)                             # inclusive, ≤ 0
+    tot = cum[:, :, -1:]                                     # chunk total decay
+    # q-side exponent: S_t = w_t S_{t-1} + k_t v_t is read *post*-decay by
+    # Mamba (y_t = q_t S_t → exp(cum_t)) and *pre*-decay by RWKV
+    # (y_t = q_t S_{t-1} → exp(cum_{t-1}), exclusive cumsum).
+    qexp = cum if bonus_u is None else cum - wc
+
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def body(s, inp):
+        qb, kb, vb, qe, cumb, totb = inp               # [b,c,h,dk] etc.
+        y = _intra_chunk(qb, kb, vb, qe, cumb, rwkv=rwkv, u=u)
+        # inter-chunk: carried state read with exp(qexp) decay (≤ 0)
+        y = y + jnp.einsum("bihd,bhde->bihe", qb * jnp.exp(qe), s)
+        # state update: S' = e^{tot} S + Σ_j e^{tot-cum_j} k_j v_jᵀ (≤ 0)
+        k_out = kb * jnp.exp(totb - cumb)
+        s = s * jnp.exp(totb[:, 0, :, :, None]) + jnp.einsum(
+            "bjhd,bjhe->bhde", k_out, vb)
+        return s, y
+
+    # OPT (§Perf, REPRO_OPT=remat_scan): checkpoint the chunk body so the
+    # backward pass recomputes intra-chunk tensors instead of saving the
+    # per-chunk [C,C] attention + rescaled q'/k' for every chunk of every
+    # layer (the dominant temp-memory term for deep SSM/hybrid training).
+    import os as _os
+    if "remat_scan" in _os.environ.get("REPRO_OPT", ""):
+        body = jax.checkpoint(body)
+
+    final, ys = jax.lax.scan(body, s0, (qc, kc, vc, qexp, cum, tot))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, dv)
+    return y.astype(q.dtype), final
+
+
+def linear_attn_step(q, k, v, log_w, state, *, bonus_u=None):
+    """Single decode step. q,k [B,H,dk], v [B,H,dv], state [B,H,dk,dv]."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))
+    upd = jnp.einsum("bhd,bhe->bhde", kf, vf)
+    if bonus_u is None:
+        state = state * w[..., None] + upd
+        y = jnp.einsum("bhd,bhde->bhe", qf, state)
+    else:
+        y = jnp.einsum("bhd,bhde->bhe", qf, state) + jnp.einsum(
+            "bhd,hd,bhd,bhe->bhe", qf, bonus_u, kf, vf)
+        state = state * w[..., None] + upd
+    return y.astype(q.dtype), state
+
+
+def naive_linear_attn(q, k, v, log_w, *, bonus_u=None, initial_state=None):
+    """Sequential oracle for tests."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    s = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+         else initial_state.astype(jnp.float32))
+    ys = []
+    for i in range(t):
+        y, s = linear_attn_step(q[:, i], k[:, i], v[:, i], log_w[:, i], s,
+                                bonus_u=bonus_u)
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(q.dtype), s
+
+
+# ---------------------------------------------------------------------- RWKV6
+class RWKVState(NamedTuple):
+    wkv: jax.Array        # [B, H, dk, dv]
+    shift_tm: jax.Array   # [B, d_model] previous token (time-mix shift)
+    shift_cm: jax.Array   # [B, d_model] previous token (channel-mix shift)
+
+
+class RWKV6Block:
+    """Finch time-mix (data-dependent decay via low-rank ddlerp) +
+    squared-relu channel-mix. arXiv:2404.05892, simplified LoRA ranks."""
+
+    LORA_RANK = 32
+
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype=None):
+        dtype = dtype or cfg.jnp_dtype
+        d = cfg.d_model
+        hd = cfg.ssm_head_dim
+        h = d // hd
+        r = RWKV6Block.LORA_RANK
+        ks = jax.random.split(key, 16)
+        p = {
+            "mix": normal_init(ks[0], (5, d), scale=0.02, dtype=dtype),  # r,k,v,w,g
+            "lora_a": normal_init(ks[1], (d, r), scale=0.02, dtype=dtype),
+            "lora_b": normal_init(ks[2], (r, 5 * d), scale=0.02, dtype=dtype),
+            "w0": zeros_init(ks[3], (d,), dtype=jnp.float32),
+            "wr": Linear.init(ks[4], d, d, use_bias=False, dtype=dtype),
+            "wk": Linear.init(ks[5], d, d, use_bias=False, dtype=dtype),
+            "wv": Linear.init(ks[6], d, d, use_bias=False, dtype=dtype),
+            "wg": Linear.init(ks[7], d, d, use_bias=False, dtype=dtype),
+            "wo": Linear.init(ks[8], d, d, use_bias=False, dtype=dtype),
+            "bonus_u": normal_init(ks[9], (h, hd), scale=0.02, dtype=jnp.float32),
+            "ln_x": RMSNorm.init(ks[10], d, dtype=dtype),
+            # channel mix
+            "cm_mix": normal_init(ks[11], (2, d), scale=0.02, dtype=dtype),
+            "cm_k": Linear.init(ks[12], d, cfg.d_ff, use_bias=False, dtype=dtype),
+            "cm_v": Linear.init(ks[13], cfg.d_ff, d, use_bias=False, dtype=dtype),
+            "cm_r": Linear.init(ks[14], d, d, use_bias=False, dtype=dtype),
+        }
+        return p
+
+    @staticmethod
+    def _mix_inputs(params, x, x_prev):
+        """Data-dependent lerp between x_t and x_{t-1} for the 5 streams."""
+        delta = x_prev - x
+        base = params["mix"]                                     # [5, d]
+        lora = jnp.tanh((x + 0.5 * delta) @ params["lora_a"]) @ params["lora_b"]
+        lora = lora.reshape(*x.shape[:-1], 5, x.shape[-1])
+        mix = jax.nn.sigmoid(base + lora)                        # [..., 5, d]
+        return x[..., None, :] + delta[..., None, :] * mix       # [..., 5, d]
+
+    @staticmethod
+    def _tm_project(params, cfg, streams):
+        d = cfg.d_model
+        hd = cfg.ssm_head_dim
+        h = d // hd
+        xr, xk, xv, xw, xg = (streams[..., i, :] for i in range(5))
+        sh = (*xr.shape[:-1], h, hd)
+        r = Linear.apply(params["wr"], xr).reshape(sh)
+        k = Linear.apply(params["wk"], xk).reshape(sh)
+        v = Linear.apply(params["wv"], xv).reshape(sh)
+        g = jax.nn.silu(Linear.apply(params["wg"], xg))
+        # data-dependent decay: w = exp(-exp(w0 + lora_w)) ∈ (0, 1)
+        logw = -jnp.exp(params["w0"].astype(jnp.float32)
+                        + xw.astype(jnp.float32) * 0.0
+                        + (jnp.tanh(xw @ params["lora_a"])
+                           @ params["lora_b"][:, :d]).astype(jnp.float32))
+        logw = logw.reshape(sh).astype(jnp.float32)
+        return r, k, v, g, logw
+
+    @staticmethod
+    def init_state(cfg: ArchConfig, batch: int, dtype=None) -> RWKVState:
+        dtype = dtype or cfg.jnp_dtype
+        d = cfg.d_model
+        hd = cfg.ssm_head_dim
+        h = d // hd
+        return RWKVState(
+            jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, d), dtype),
+        )
+
+    @staticmethod
+    def time_mix(params, cfg: ArchConfig, x, state: RWKVState | None):
+        """x [B,T,d] (train/prefill, state optional) -> (y, new_state parts)."""
+        b, t, d = x.shape
+        prev = (jnp.zeros((b, 1, d), x.dtype) if state is None
+                else state.shift_tm[:, None, :])
+        x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+        streams = RWKV6Block._mix_inputs(params, x, x_prev)
+        r, k, v, g, logw = RWKV6Block._tm_project(params, cfg, streams)
+        s0 = None if state is None else state.wkv
+        y, s = chunked_linear_attn(r, k, v, logw, chunk=cfg.ssm_chunk,
+                                   bonus_u=params["bonus_u"], initial_state=s0)
+        y = RMSNorm.apply(params["ln_x"], y.reshape(b, t, d)) * g
+        return Linear.apply(params["wo"], y), s, x[:, -1]
+
+    @staticmethod
+    def channel_mix(params, x, x_prev_last=None):
+        b, t, d = x.shape
+        prev = (jnp.zeros((b, 1, d), x.dtype) if x_prev_last is None
+                else x_prev_last[:, None, :])
+        x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+        delta = x_prev - x
+        mk = jax.nn.sigmoid(params["cm_mix"][0])
+        mr = jax.nn.sigmoid(params["cm_mix"][1])
+        xk = x + delta * mk
+        xr = x + delta * mr
+        k = jnp.square(jax.nn.relu(Linear.apply(params["cm_k"], xk)))
+        return jax.nn.sigmoid(Linear.apply(params["cm_r"], xr)) \
+            * Linear.apply(params["cm_v"], k)
+
+    @staticmethod
+    def apply_dense(params, cfg: ArchConfig, x, state: RWKVState | None = None):
+        """Full block: time-mix + channel-mix with pre-norms handled by
+        caller. Returns (y_tm, y_cm_fn, new_state)."""
+        y, wkv, last_tm = RWKV6Block.time_mix(params, cfg, x, state)
+        return y, wkv, last_tm
+
+    @staticmethod
+    def apply_decode(params, cfg: ArchConfig, x, state: RWKVState):
+        """x [B,1,d] one token."""
+        b, _, d = x.shape
+        streams = RWKV6Block._mix_inputs(params, x[:, 0], state.shift_tm)
+        r, k, v, g, logw = RWKV6Block._tm_project(params, cfg,
+                                                  streams[:, None])
+        y, wkv = linear_attn_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+                                  state.wkv, bonus_u=params["bonus_u"])
+        y = RMSNorm.apply(params["ln_x"], y.reshape(b, 1, d)) * g
+        y = Linear.apply(params["wo"], y)
+        return y, RWKVState(wkv, x[:, 0], state.shift_cm)
+
+
+# --------------------------------------------------------------------- Mamba2
+class MambaState(NamedTuple):
+    ssd: jax.Array        # [B, H, d_state, head_dim]
+    conv: jax.Array       # [B, conv_k - 1, d_conv_in]
+
+
+class Mamba2Block:
+    """Mamba2 / SSD block (arXiv:2405.21060 form used by Zamba2)."""
+
+    CONV_K = 4
+
+    @staticmethod
+    def dims(cfg: ArchConfig):
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = d_inner // cfg.ssm_head_dim
+        d_conv_in = d_inner + 2 * cfg.d_state   # x, B, C share the conv
+        return d_inner, h, d_conv_in
+
+    @staticmethod
+    def init(key, cfg: ArchConfig, dtype=None):
+        dtype = dtype or cfg.jnp_dtype
+        d = cfg.d_model
+        d_inner, h, d_conv_in = Mamba2Block.dims(cfg)
+        ks = jax.random.split(key, 6)
+        return {
+            "in_proj": Linear.init(ks[0], d, 2 * d_inner + 2 * cfg.d_state + h,
+                                   use_bias=False, dtype=dtype),
+            "conv_w": normal_init(ks[1], (Mamba2Block.CONV_K, d_conv_in),
+                                  scale=0.5, dtype=dtype),
+            "conv_b": zeros_init(ks[2], (d_conv_in,), dtype=dtype),
+            "a_log": normal_init(ks[3], (h,), scale=0.1, dtype=jnp.float32),
+            "dt_bias": zeros_init(ks[4], (h,), dtype=jnp.float32),
+            "norm": RMSNorm.init(ks[5], d_inner, dtype=dtype),
+            "out_proj": Linear.init(ks[5], d_inner, d, use_bias=False,
+                                    dtype=dtype),
+        }
+
+    @staticmethod
+    def _split(cfg, zxbcdt):
+        d_inner, h, _ = Mamba2Block.dims(cfg)
+        z, x, bc, dt = jnp.split(
+            zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * cfg.d_state], -1)
+        bmat, cmat = jnp.split(bc, 2, axis=-1)
+        return z, x, bmat, cmat, dt
+
+    @staticmethod
+    def _conv(params, xbc, conv_state=None):
+        """Causal depthwise conv over time. xbc [B,T,C]."""
+        k = Mamba2Block.CONV_K
+        if conv_state is None:
+            pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+        else:
+            pad = conv_state
+        xp = jnp.concatenate([pad, xbc], axis=1)
+        w = params["conv_w"]
+        out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+        return jax.nn.silu(out + params["conv_b"]), xp[:, -(k - 1):]
+
+    @staticmethod
+    def init_state(cfg: ArchConfig, batch: int, dtype=None) -> MambaState:
+        dtype = dtype or cfg.jnp_dtype
+        d_inner, h, d_conv_in = Mamba2Block.dims(cfg)
+        return MambaState(
+            jnp.zeros((batch, h, cfg.d_state, cfg.ssm_head_dim), jnp.float32),
+            jnp.zeros((batch, Mamba2Block.CONV_K - 1, d_conv_in), dtype),
+        )
+
+    @staticmethod
+    def _ssd_inputs(params, cfg, x, bmat, cmat, dt):
+        b, t, _ = x.shape
+        d_inner, h, _ = Mamba2Block.dims(cfg)
+        hd = cfg.ssm_head_dim
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["dt_bias"])              # [B,T,H]
+        a = -jnp.exp(params["a_log"])                          # [H] < 0
+        logw = (dt * a)[..., None]                             # [B,T,H,1]
+        logw = jnp.broadcast_to(logw, (b, t, h, cfg.d_state))
+        xh = x.reshape(b, t, h, hd)
+        v = xh * dt[..., None].astype(xh.dtype)                # Δ·x
+        k = jnp.broadcast_to(bmat[:, :, None, :], (b, t, h, cfg.d_state))
+        q = jnp.broadcast_to(cmat[:, :, None, :], (b, t, h, cfg.d_state))
+        return q, k, v, logw
+
+    @staticmethod
+    def apply_dense(params, cfg: ArchConfig, xin, state: MambaState | None = None):
+        b, t, _ = xin.shape
+        d_inner, h, _ = Mamba2Block.dims(cfg)
+        z, x, bmat, cmat, dt = Mamba2Block._split(
+            cfg, Linear.apply(params["in_proj"], xin))
+        xbc, conv_state = Mamba2Block._conv(
+            params, jnp.concatenate([x, bmat, cmat], -1),
+            None if state is None else state.conv)
+        x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + cfg.d_state], -1)
+        q, k, v, logw = Mamba2Block._ssd_inputs(params, cfg, x, bmat, cmat, dt)
+        y, ssd = chunked_linear_attn(
+            q, k, v, logw, chunk=cfg.ssm_chunk,
+            initial_state=None if state is None else state.ssd)
+        y = y.reshape(b, t, d_inner)
+        y = RMSNorm.apply(params["norm"], y * jax.nn.silu(z))
+        return Linear.apply(params["out_proj"], y), MambaState(ssd, conv_state)
+
+    @staticmethod
+    def apply_decode(params, cfg: ArchConfig, xin, state: MambaState):
+        b = xin.shape[0]
+        d_inner, h, _ = Mamba2Block.dims(cfg)
+        z, x, bmat, cmat, dt = Mamba2Block._split(
+            cfg, Linear.apply(params["in_proj"], xin))
+        xbc, conv_state = Mamba2Block._conv(
+            params, jnp.concatenate([x, bmat, cmat], -1), state.conv)
+        x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + cfg.d_state], -1)
+        q, k, v, logw = Mamba2Block._ssd_inputs(params, cfg, x, bmat, cmat, dt)
+        y, ssd = linear_attn_step(q[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+                                  state.ssd)
+        y = y.reshape(b, 1, d_inner)
+        y = RMSNorm.apply(params["norm"], y * jax.nn.silu(z))
+        return Linear.apply(params["out_proj"], y), MambaState(ssd, conv_state)

@@ -1,0 +1,44 @@
+"""Minimal pure-JAX neural-network substrate.
+
+No flax/optax in this environment — modules are (init, apply) pairs over
+plain dict pytrees. Conventions:
+
+* ``init(key, ...) -> params``  returns a nested dict of jnp arrays.
+* ``apply(params, x, ...) -> y`` is a pure function.
+* All shapes follow ``[..., features]`` (channel-last).
+"""
+from repro.nn.initializers import (
+    normal_init,
+    truncated_normal_init,
+    xavier_uniform,
+    he_normal,
+    zeros_init,
+    ones_init,
+)
+from repro.nn.layers import (
+    Linear,
+    Embedding,
+    LayerNorm,
+    RMSNorm,
+    Conv2D,
+    MLP,
+    Dropout,
+)
+from repro.nn.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_map_with_path,
+    tree_cast,
+    tree_zeros_like,
+    tree_global_norm,
+    flatten_dict,
+    unflatten_dict,
+)
+
+__all__ = [
+    "normal_init", "truncated_normal_init", "xavier_uniform", "he_normal",
+    "zeros_init", "ones_init",
+    "Linear", "Embedding", "LayerNorm", "RMSNorm", "Conv2D", "MLP", "Dropout",
+    "tree_size", "tree_bytes", "tree_map_with_path", "tree_cast",
+    "tree_zeros_like", "tree_global_norm", "flatten_dict", "unflatten_dict",
+]

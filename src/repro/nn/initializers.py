@@ -1,0 +1,50 @@
+"""Weight initializers (pure JAX)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def truncated_normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    # 2-sigma truncation, rescaled to unit variance before applying scale.
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+    return x * (scale / 0.87962566)
+
+
+def xavier_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = _fans(shape)
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def he_normal(key, shape, dtype=jnp.float32):
+    fan_in, _ = _fans(shape)
+    return jax.random.normal(key, shape, dtype) * math.sqrt(2.0 / fan_in)
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def _fans(shape):
+    """fan_in/fan_out for dense [in, out] and conv [h, w, cin, cout] kernels."""
+    if len(shape) < 1:
+        return 1, 1
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    if len(shape) == 2:
+        return shape[0], shape[1]
+    receptive = math.prod(shape[:-2])
+    return shape[-2] * receptive, shape[-1] * receptive

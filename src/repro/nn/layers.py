@@ -1,0 +1,130 @@
+"""Core layers as (init, apply) namespaces over dict pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.initializers import (
+    he_normal,
+    normal_init,
+    ones_init,
+    xavier_uniform,
+    zeros_init,
+)
+
+
+class Linear:
+    @staticmethod
+    def init(key, in_dim: int, out_dim: int, *, use_bias: bool = True,
+             init=xavier_uniform, dtype=jnp.float32):
+        kw, kb = jax.random.split(key)
+        p = {"w": init(kw, (in_dim, out_dim), dtype=dtype)}
+        if use_bias:
+            p["b"] = zeros_init(kb, (out_dim,), dtype=dtype)
+        return p
+
+    @staticmethod
+    def apply(params, x):
+        y = x @ params["w"]
+        if "b" in params:
+            y = y + params["b"]
+        return y
+
+
+class Embedding:
+    @staticmethod
+    def init(key, vocab: int, dim: int, *, scale: float = 0.02, dtype=jnp.float32):
+        return {"table": normal_init(key, (vocab, dim), scale=scale, dtype=dtype)}
+
+    @staticmethod
+    def apply(params, ids):
+        return jnp.take(params["table"], ids, axis=0)
+
+    @staticmethod
+    def attend(params, x):
+        """Tied-readout logits: [..., dim] @ [dim, vocab]."""
+        return x @ params["table"].T
+
+
+class LayerNorm:
+    @staticmethod
+    def init(key, dim: int, *, use_bias: bool = True, dtype=jnp.float32):
+        p = {"scale": ones_init(key, (dim,), dtype=dtype)}
+        if use_bias:
+            p["bias"] = zeros_init(key, (dim,), dtype=dtype)
+        return p
+
+    @staticmethod
+    def apply(params, x, *, eps: float = 1e-5):
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32)
+        if "bias" in params:
+            y = y + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+
+class RMSNorm:
+    @staticmethod
+    def init(key, dim: int, dtype=jnp.float32):
+        return {"scale": ones_init(key, (dim,), dtype=dtype)}
+
+    @staticmethod
+    def apply(params, x, *, eps: float = 1e-6):
+        xf = x.astype(jnp.float32)
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+
+class Conv2D:
+    """NHWC conv with HWIO kernel."""
+
+    @staticmethod
+    def init(key, in_ch: int, out_ch: int, kernel=(3, 3), *, use_bias: bool = True,
+             dtype=jnp.float32):
+        kw, kb = jax.random.split(key)
+        p = {"w": he_normal(kw, (*kernel, in_ch, out_ch), dtype=dtype)}
+        if use_bias:
+            p["b"] = zeros_init(kb, (out_ch,), dtype=dtype)
+        return p
+
+    @staticmethod
+    def apply(params, x, *, stride=(1, 1), padding="SAME"):
+        y = jax.lax.conv_general_dilated(
+            x, params["w"], window_strides=stride, padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        if "b" in params:
+            y = y + params["b"]
+        return y
+
+
+class MLP:
+    """Two-layer MLP with configurable activation (paper Eq. 14 uses relu)."""
+
+    @staticmethod
+    def init(key, in_dim: int, hidden: int, out_dim: int, *, use_bias: bool = True,
+             dtype=jnp.float32):
+        k1, k2 = jax.random.split(key)
+        return {
+            "fc1": Linear.init(k1, in_dim, hidden, use_bias=use_bias, dtype=dtype),
+            "fc2": Linear.init(k2, hidden, out_dim, use_bias=use_bias, dtype=dtype),
+        }
+
+    @staticmethod
+    def apply(params, x, *, activation=jax.nn.relu):
+        h = activation(Linear.apply(params["fc1"], x))
+        return Linear.apply(params["fc2"], h)
+
+
+class Dropout:
+    @staticmethod
+    def apply(key, x, rate: float, *, deterministic: bool):
+        if deterministic or rate <= 0.0:
+            return x
+        keep = 1.0 - rate
+        mask = jax.random.bernoulli(key, keep, x.shape)
+        return jnp.where(mask, x / keep, 0.0).astype(x.dtype)

@@ -1,0 +1,68 @@
+"""Pytree utilities for parameter dicts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters."""
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_map_with_path(fn, tree):
+    """Map ``fn(path_str, leaf) -> leaf`` over a nested-dict pytree."""
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else k, v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(rec(f"{prefix}/{i}", v) for i, v in enumerate(node))
+        return fn(prefix, node)
+
+    return rec("", tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.asarray(0.0)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def flatten_dict(d, sep: str = "/", prefix: str = ""):
+    """Nested dict -> flat {path: leaf}."""
+    out = {}
+    for k, v in d.items():
+        path = f"{prefix}{sep}{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, sep=sep, prefix=path))
+        else:
+            out[path] = v
+    return out
+
+
+def unflatten_dict(flat, sep: str = "/"):
+    out = {}
+    for path, v in flat.items():
+        keys = path.split(sep)
+        node = out
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = v
+    return out

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import adam, adamw, sgd, clip_by_global_norm, chain_clip
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "adam", "adamw", "sgd", "clip_by_global_norm", "chain_clip",
+    "constant", "cosine_decay", "linear_warmup_cosine",
+]

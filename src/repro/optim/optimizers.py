@@ -1,0 +1,109 @@
+"""Pure-JAX optimizers with an optax-like (init, update) interface.
+
+The paper trains GRLE's GCN with Adam at lr=1e-3 (§VI-A); the LLM training
+substrate uses AdamW. An optimizer is a namedtuple-of-functions:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.pytree import tree_global_norm, tree_zeros_like
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _sched(lr):
+    return lr if callable(lr) else (lambda step: lr)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": tree_zeros_like(params),
+                "nu": tree_zeros_like(params)}
+
+    def update(grads, state, params=None):
+        del params
+        step = state["step"] + 1
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                                    state["nu"], grads)
+        sf = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** sf
+        bc2 = 1.0 - b2 ** sf
+        lr_t = lr_fn(step)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1):
+    lr_fn = _sched(lr)
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        lr_t = lr_fn(state["step"] + 1)
+        updates, state = base.update(grads, state)
+        updates = jax.tree_util.tree_map(
+            lambda u, p: u - lr_t * weight_decay * p, updates, params)
+        return updates, state
+
+    return Optimizer(base.init, update)
+
+
+def sgd(lr, momentum: float = 0.0):
+    lr_fn = _sched(lr)
+
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["vel"] = tree_zeros_like(params)
+        return st
+
+    def update(grads, state, params=None):
+        del params
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            vel = jax.tree_util.tree_map(lambda v, g: momentum * v + g,
+                                         state["vel"], grads)
+            updates = jax.tree_util.tree_map(lambda v: -lr_t * v, vel)
+            return updates, {"step": step, "vel": vel}
+        updates = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params=None):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)

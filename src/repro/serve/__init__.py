@@ -1,0 +1,3 @@
+from repro.serve.engine import EdgeServingEngine, Replica, Request
+
+__all__ = ["EdgeServingEngine", "Replica", "Request"]

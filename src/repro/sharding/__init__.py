@@ -1,0 +1,12 @@
+from repro.sharding.partition import (
+    param_pspecs,
+    batch_pspec,
+    cache_pspecs,
+    make_named_sharding,
+    shard_tree_specs,
+)
+
+__all__ = [
+    "param_pspecs", "batch_pspec", "cache_pspecs", "make_named_sharding",
+    "shard_tree_specs",
+]

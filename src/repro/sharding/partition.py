@@ -1,0 +1,204 @@
+"""Partition rules: parameter/cache PartitionSpecs per architecture.
+
+Scheme (DESIGN.md §6):
+  * tensor parallel on the ``model`` axis: attention heads, FFN columns,
+    MoE experts, vocab;
+  * data parallel on ``(pod, data)`` for batch dims;
+  * ``cfg.fsdp`` additionally shards the non-model weight dim (and hence
+    Adam state) over ``data`` — XLA SPMD turns this into per-use
+    all-gathers + reduce-scatter on grads, ZeRO-style.
+
+Every rule is divisibility-checked against the mesh: a dim that does not
+divide the axis size falls back to replication (e.g. whisper's odd 51865
+vocab, 8 KV heads on a 16-way model axis — those caches shard head_dim
+instead).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.nn.pytree import flatten_dict, unflatten_dict
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _fits(dim: Optional[int], mesh: Mesh, axis) -> bool:
+    if axis is None or dim is None:
+        return True
+    return dim % _axis_size(mesh, axis) == 0
+
+
+def _spec(shape, mesh, *axes):
+    """Build a PartitionSpec, dropping axes that don't divide."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        out.append(ax if (ax is not None and _fits(dim, mesh, ax)) else None)
+    return P(*out)
+
+
+# Suffix-pattern rules: (regex on the flattened path, (axis per dim)).
+# 'M' = model axis, 'F' = fsdp axis (data, only when cfg.fsdp), '-' = none.
+_RULES = [
+    (r"embed/table$",            ("M", "F")),
+    (r"lm_head/w$",              ("F", "M")),
+    (r"(wq|wk|wv|wg|cm_k|cm_r)/w$", ("F", "M")),
+    (r"(wq|wk|wv|wg)/b$",        ("M",)),
+    (r"(wo|cm_v|w_o|out_proj)/w$", ("M", "F")),
+    (r"(w1|w3|fc1)/w$",          ("F", "M")),
+    (r"(w2|fc2)/w$",             ("M", "F")),
+    (r"router/w$",               ("-", "-")),
+    # MoE expert tensors [E, d, m] / [E, m, d]
+    (r"ffn/w1$",                 ("M", "F", "-")),
+    (r"ffn/w3$",                 ("M", "F", "-")),
+    (r"ffn/w2$",                 ("M", "F", "-")),
+    # MLA
+    (r"w_dkv/w$",                ("F", "-")),
+    (r"w_kpe/w$",                ("-", "-")),
+    (r"w_uk$",                   ("F", "M", "-")),
+    (r"w_uv$",                   ("F", "M", "-")),
+    # Mamba2
+    (r"in_proj/w$",              ("F", "M")),
+    (r"conv_w$",                 ("-", "M")),
+    (r"conv_b$",                 ("M",)),
+    # RWKV6
+    (r"lora_a$",                 ("F", "-")),
+    (r"lora_b$",                 ("-", "M")),
+]
+
+
+def _rule_for(path: str, shape, cfg: ArchConfig, mesh: Mesh) -> P:
+    # layer-stacked params have a leading L axis -> shift rules right by one
+    # (we detect the stack by path prefix, not shape).
+    stacked = bool(re.search(r"(^|/)(blocks|encoder|exit_norms)/", path))
+    for pat, axes in _RULES:
+        if re.search(pat, path):
+            names = []
+            for a in axes:
+                if a == "M":
+                    names.append("model")
+                elif a == "F":
+                    names.append("data" if cfg.fsdp else None)
+                else:
+                    names.append(None)
+            if stacked:
+                names = [None] + names
+            # ignore trailing rule axes beyond rank
+            names = names[: len(shape)]
+            names += [None] * (len(shape) - len(names))
+            return _spec(shape, mesh, *names)
+    return P(*([None] * len(shape)))   # norms, scalars, small tensors
+
+
+def param_pspecs(cfg: ArchConfig, params_shape, mesh: Mesh):
+    """params_shape: pytree of ShapeDtypeStruct/arrays -> pytree of P."""
+    flat = flatten_dict(params_shape)
+    specs = {p: _rule_for(p, v.shape, cfg, mesh) for p, v in flat.items()}
+    return unflatten_dict(specs)
+
+
+def batch_pspec(mesh: Mesh):
+    """Leading-batch sharding over every data-like axis present."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _batch_axes(mesh: Mesh, dim: int):
+    """Best data-parallel sharding of a batch dim of the given size."""
+    cands = [("pod", "data"), ("data",), ("pod",)]
+    for c in cands:
+        names = tuple(n for n in c if n in mesh.shape)
+        if names and dim % _axis_size(mesh, names) == 0:
+            return names if len(names) > 1 else names[0]
+    return None
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shape, mesh: Mesh, seq_len: int):
+    """Sharding for decode caches (shape-dispatched; ``seq_len`` is the
+    cache length, used to tell KV buffers [L,B,S,...] from recurrent
+    states [L,B,H,...]).
+
+    GQA cache [L, B, S, KVH, hd]: batch over (pod,data) when divisible; KV
+    heads over model when divisible, else head_dim over model, else the
+    sequence dim over data (long-context, batch=1).
+    """
+    kv_len = min(seq_len, cfg.window) if cfg.window else seq_len
+
+    def is_seq(dim: int) -> bool:
+        return dim in (seq_len, kv_len, cfg.n_audio_frames)
+
+    def spec_for(v, layer_stacked: bool):
+        shape = v.shape
+        if not layer_stacked:                    # enc_out [B, frames, d]
+            return _spec(shape, mesh, _batch_axes(mesh, shape[0]), None,
+                         "model")
+        b = shape[1]
+        baxes = _batch_axes(mesh, b)
+        rest = shape[2:]
+        if len(rest) == 3 and is_seq(rest[0]):   # GQA [S, KVH, hd]
+            s, kvh, hd = rest
+            if _fits(kvh, mesh, "model") and kvh >= _axis_size(mesh, "model"):
+                return P(None, baxes, None, "model", None)
+            # OPT-2 (§Perf): kv_heads don't divide the model axis — shard
+            # the sequence dim on `model` (flash-decode style partial
+            # attention) instead of head_dim (which psums full logits).
+            from repro.sharding.runtime import enabled
+            if enabled("seqshard_cache") and _fits(s, mesh, "model") \
+                    and s >= _axis_size(mesh, "model"):
+                return P(None, baxes, "model", None, None)
+            if _fits(hd, mesh, "model") and hd >= _axis_size(mesh, "model"):
+                if baxes is None and _fits(s, mesh, "data"):
+                    return P(None, None, "data", None, "model")
+                return P(None, baxes, None, None, "model")
+            if baxes is None and _fits(s, mesh, "data"):
+                return P(None, None, "data", None, None)
+            return P(None, baxes, None, None, None)
+        if len(rest) == 2 and is_seq(rest[0]):   # MLA [S, r] / [S, rope_dim]
+            s, r = rest
+            if _fits(r, mesh, "model") and r >= _axis_size(mesh, "model"):
+                if baxes is None and _fits(s, mesh, "data"):
+                    return P(None, None, "data", "model")
+                return P(None, baxes, None, "model")
+            if baxes is None and _fits(s, mesh, "data"):
+                return P(None, None, "data", None)
+            return P(None, baxes, None, None)
+        if len(rest) == 3:                       # ssm state [H, dk, dv]
+            h = rest[0]
+            ax = "model" if (_fits(h, mesh, "model")
+                             and h >= _axis_size(mesh, "model")) else None
+            return P(None, baxes, ax, None, None)
+        if len(rest) == 2:                       # conv state [K-1, C]
+            return P(None, baxes, None,
+                     "model" if _fits(rest[1], mesh, "model") else None)
+        if len(rest) == 1:                       # shift state [d]
+            return _spec(shape, mesh, None, baxes, "model")
+        return P(*([None] * len(shape)))
+
+    def top(key, subtree):
+        stacked = key != "enc_out"
+        return jax.tree_util.tree_map(lambda v: spec_for(v, stacked), subtree)
+
+    return {k: top(k, v) for k, v in cache_shape.items()}
+
+
+def make_named_sharding(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_tree_specs(mesh: Mesh, tree, spec_tree):
+    """Pair a pytree of ShapeDtypeStructs with NamedShardings."""
+    shardings = make_named_sharding(mesh, spec_tree)
+    return jax.tree_util.tree_map(
+        lambda v, s: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s),
+        tree, shardings)

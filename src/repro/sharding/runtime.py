@@ -1,0 +1,59 @@
+"""Runtime optimization toggles for the §Perf hillclimb.
+
+Each beyond-paper optimization is gated by a flag in the REPRO_OPT env var
+(comma-separated) so baseline vs optimized dry-runs are one env switch
+apart and both stay reproducible:
+
+  no_fsdp_infer   OPT-1: inference (prefill/decode) param specs drop the
+                  FSDP data-axis sharding — weights are replicated over
+                  `data` and only tensor-parallel over `model`, removing
+                  the per-layer weight all-gathers that dominate the
+                  collective roofline term of fsdp archs at inference.
+  seqshard_cache  OPT-2: decode KV caches whose kv_heads don't divide the
+                  model axis shard the *sequence* dim on `model` instead of
+                  head_dim — QK/AV contractions stay local per shard and
+                  only softmax stats / small outputs cross chips, instead
+                  of a 2x-wire all-reduce of full [B,H,S] logits.
+  seq_parallel    OPT-3: training activations are constrained to
+                  sequence-sharding on `model` at every block boundary
+                  (Megatron-style sequence parallelism): XLA then emits
+                  reduce-scatter + all-gather pairs instead of all-reduces
+                  (half the wire bytes) and the remat-saved per-layer
+                  activations shrink by the model-axis factor.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def opts() -> set:
+    return set(filter(None, os.environ.get("REPRO_OPT", "").split(",")))
+
+
+def enabled(name: str) -> bool:
+    return name in opts()
+
+
+# Module-global activation spec, set by the launcher when seq_parallel is on.
+_ACTIVATION_SPEC = None
+
+
+def set_activation_spec(spec) -> None:
+    global _ACTIVATION_SPEC
+    _ACTIVATION_SPEC = spec
+
+
+def constrain_activations(x):
+    """Apply the block-boundary activation constraint ([B, S, D])."""
+    if _ACTIVATION_SPEC is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACTIVATION_SPEC)
+
+
+def default_seq_parallel_spec(mesh):
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    b = baxes if len(baxes) > 1 else baxes[0]
+    return P(b, "model", None)

@@ -1,0 +1,15 @@
+from repro.train.steps import (
+    TrainState,
+    make_train_state,
+    make_train_step,
+    make_serve_step,
+    make_prefill_step,
+    chunked_ce_loss,
+)
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint
+
+__all__ = [
+    "TrainState", "make_train_state", "make_train_step", "make_serve_step",
+    "make_prefill_step", "chunked_ce_loss",
+    "save_checkpoint", "restore_checkpoint",
+]

@@ -1,0 +1,77 @@
+"""Msgpack + zstd checkpointing for param/optimizer pytrees."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+from repro.nn.pytree import flatten_dict, unflatten_dict
+
+
+def _encode_tree(tree) -> dict:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):            # match jax dict-flatten order
+                rec(f"{prefix}/{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/__seq{i}", v)
+        else:
+            arr = np.asarray(node)
+            flat[prefix] = {
+                "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "data": arr.tobytes(),
+            }
+
+    rec("", tree)
+    return flat
+
+
+def save_checkpoint(path: str, tree, *, level: int = 3) -> None:
+    payload = msgpack.packb(_encode_tree(tree))
+    comp = zstandard.ZstdCompressor(level=level).compress(payload)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(comp)
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(path: str, like=None):
+    """Restore; if ``like`` is given, reshape into its pytree structure
+    (including tuples/NamedTuples), else return a nested dict."""
+    with open(path, "rb") as f:
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    flat = msgpack.unpackb(payload)
+    arrays = {
+        k: jnp.asarray(np.frombuffer(v["data"], dtype=v["dtype"])
+                       .reshape(v["shape"]))
+        for k, v in flat.items()
+    }
+    if like is None:
+        # rebuild nested dicts (sequence markers stay as dict keys)
+        return unflatten_dict(arrays)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    # match ordering: encode ``like`` paths the same way
+    order = []
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}/{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/__seq{i}", v)
+        else:
+            order.append(prefix)
+
+    rec("", like)
+    leaves = [arrays[p] for p in order]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,135 @@
+"""Jit-able train / prefill / serve steps for every architecture.
+
+* ``train_step``: multi-exit weighted CE (the paper's early-exit training
+  objective lifted to LMs: main branch weight 1.0, earlier exits 0.3) +
+  MoE load-balance aux. CE is computed in sequence chunks against the
+  shared LM head so [B, S, V] logits never fully materialize.
+* ``serve_step``: one decode token vs. the cache, per-exit variants.
+* ``prefill_step``: full-sequence forward that fills the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.lm import DecoderLM, EncDecLM, model_for
+from repro.nn import Linear
+from repro.optim import adamw
+from repro.optim.optimizers import Optimizer, apply_updates
+
+EXIT_WEIGHT = 0.3   # weight of non-final exits in the training loss
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def make_train_state(cfg: ArchConfig, key, optimizer: Optional[Optimizer] = None):
+    model = model_for(cfg)
+    params = model.init(key, cfg)
+    opt = optimizer or adamw(3e-4)
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32)), opt
+
+
+def chunked_ce_loss(head_params, hidden, labels, *, chunk: int = 2048):
+    """Mean token CE of hidden [B,S,D] vs labels [B,S] through the LM head,
+    scanning sequence chunks (remat'd) to bound logits memory."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    nb = s // c
+    hs = jnp.moveaxis(hidden.reshape(b, nb, c, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nb, c), 1, 0)
+
+    @jax.checkpoint
+    def one(h, lab):
+        logits = Linear.apply(head_params, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], -1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def body(acc, inp):
+        h, lab = inp
+        return acc + one(h, lab), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)
+
+
+def multi_exit_loss(params, cfg: ArchConfig, exit_hiddens, labels,
+                    head_params=None):
+    head = head_params if head_params is not None else params["lm_head"]
+    loss = jnp.zeros((), jnp.float32)
+    denom = 0.0
+    per_exit = {}
+    for e, h in exit_hiddens.items():
+        w = 1.0 if e == cfg.n_layers else EXIT_WEIGHT
+        ce = chunked_ce_loss(head, h, labels)
+        per_exit[e] = ce
+        loss = loss + w * ce
+        denom += w
+    return loss / denom, per_exit
+
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer):
+    model = model_for(cfg)
+
+    def loss_fn(params, batch):
+        if cfg.enc_layers:
+            hiddens, aux = model.forward_train(
+                params, cfg, batch["audio"], batch["tokens"])
+            head = params["decoder"]["lm_head"]
+        else:
+            hiddens, aux = model.forward_train(params, cfg, batch["tokens"])
+            head = params["lm_head"]
+        loss, per_exit = multi_exit_loss(params, cfg, hiddens,
+                                         batch["labels"], head_params=head)
+        loss = loss + cfg.router_aux_coef * aux.moe_aux
+        metrics = {"ce_" + str(e): v for e, v in per_exit.items()}
+        metrics["moe_aux"] = aux.moe_aux
+        metrics["moe_dropped"] = aux.moe_dropped
+        return loss, metrics
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics["loss"] = loss
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, *, exit_layer: Optional[int] = None):
+    model = model_for(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.serve_step(params, cfg, tokens, cache, pos,
+                                exit_layer=exit_layer)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    model = model_for(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.enc_layers:
+            enc_out = EncDecLM.encode(params, cfg, batch["audio"])
+            hiddens, aux = EncDecLM._decode_dense(
+                params["decoder"], cfg, batch["tokens"], enc_out)
+            h = hiddens[cfg.n_layers]
+            logits = DecoderLM.logits(params["decoder"], h[:, -1:])
+            return logits[:, 0]
+        h, cache, aux = DecoderLM.prefill(params, cfg, batch["tokens"])
+        logits = DecoderLM.logits(params, h[:, -1:])
+        return logits[:, 0], cache
+
+    return prefill_step

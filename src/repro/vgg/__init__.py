@@ -1,0 +1,4 @@
+from repro.vgg.model import VGG16EE, VGG16_STAGES, N_EXITS
+from repro.vgg.train import train_vgg_ee, profile_exits
+
+__all__ = ["VGG16EE", "VGG16_STAGES", "N_EXITS", "train_vgg_ee", "profile_exits"]

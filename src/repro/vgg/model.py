@@ -1,0 +1,110 @@
+"""Multi-exit VGG-16 (paper §VI-B, Fig 1/3) in pure JAX.
+
+The paper attaches a classifier after each convolutional or pooling layer —
+17 exit points with exit 17 being the main branch — then keeps the five
+*candidate* exits {1, 3, 4, 7, 17} (Table I). We enumerate the same 17
+attachment points: the 13 conv layers and the first 4 pools, with the main
+branch (final pool + FC head) as exit 17.
+
+``width_mult`` scales channel counts for CPU-trainable reduced variants;
+the exit topology is unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Conv2D, Linear
+
+# 'c<out>' = 3x3 conv + relu, 'p' = 2x2 maxpool. Standard VGG-16.
+VGG16_STAGES: Sequence[str] = (
+    "c64", "c64", "p",
+    "c128", "c128", "p",
+    "c256", "c256", "c256", "p",
+    "c512", "c512", "c512", "p",
+    "c512", "c512", "c512", "p",
+)
+# exit points: every conv and every pool except the last -> 17, main = #17
+_EXIT_AFTER = [i for i, s in enumerate(VGG16_STAGES)][: len(VGG16_STAGES) - 1]
+N_EXITS = 17
+
+
+class VGG16EE:
+    @staticmethod
+    def init(key, *, n_classes: int = 10, width_mult: float = 1.0,
+             dtype=jnp.float32):
+        keys = jax.random.split(key, len(VGG16_STAGES) + N_EXITS + 1)
+        params = {"stages": {}, "exits": {}, "head": None}
+        in_ch = 3
+        exit_idx = 0
+        ki = 0
+        for i, spec in enumerate(VGG16_STAGES):
+            if spec.startswith("c"):
+                out_ch = max(8, int(int(spec[1:]) * width_mult))
+                params["stages"][f"conv{i}"] = Conv2D.init(
+                    keys[ki], in_ch, out_ch, (3, 3), dtype=dtype)
+                ki += 1
+                in_ch = out_ch
+            if i in _EXIT_AFTER[: N_EXITS - 1] and exit_idx < N_EXITS - 1:
+                # light classifier: GAP -> linear
+                params["exits"][f"exit{exit_idx + 1}"] = Linear.init(
+                    keys[ki], in_ch, n_classes, dtype=dtype)
+                ki += 1
+                exit_idx += 1
+        params["head"] = Linear.init(keys[ki], in_ch, n_classes, dtype=dtype)
+        return params
+
+    @staticmethod
+    def apply(params, images, *, up_to_exit: int = N_EXITS):
+        """Forward pass returning logits of every exit <= up_to_exit.
+
+        images: [B, 32, 32, 3]. Returns dict {exit_no: [B, n_classes]}.
+        With ``up_to_exit < 17`` computation truncates — this is the
+        early-exit latency saving the offloading simulator models.
+        """
+        x = images
+        outs = {}
+        exit_idx = 0
+        for i, spec in enumerate(VGG16_STAGES):
+            if spec.startswith("c"):
+                x = jax.nn.relu(Conv2D.apply(params["stages"][f"conv{i}"], x))
+            else:
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                    "VALID")
+            if i in _EXIT_AFTER[: N_EXITS - 1] and exit_idx < N_EXITS - 1:
+                exit_idx += 1
+                if exit_idx <= up_to_exit:
+                    gap = x.mean(axis=(1, 2))
+                    outs[exit_idx] = Linear.apply(
+                        params["exits"][f"exit{exit_idx}"], gap)
+                if exit_idx >= up_to_exit:
+                    return outs
+        gap = x.mean(axis=(1, 2))
+        outs[N_EXITS] = Linear.apply(params["head"], gap)
+        return outs
+
+    # ------------------------------------------------------------- analytics
+    @staticmethod
+    def exit_flops(width_mult: float = 1.0, image_hw: int = 32):
+        """Cumulative forward GFLOPs up to each exit (batch 1)."""
+        hw = image_hw
+        in_ch = 3
+        cum = 0.0
+        out = {}
+        exit_idx = 0
+        for i, spec in enumerate(VGG16_STAGES):
+            if spec.startswith("c"):
+                out_ch = max(8, int(int(spec[1:]) * width_mult))
+                cum += 2.0 * 9 * in_ch * out_ch * hw * hw
+                in_ch = out_ch
+            else:
+                hw = hw // 2
+            if i in _EXIT_AFTER[: N_EXITS - 1] and exit_idx < N_EXITS - 1:
+                exit_idx += 1
+                out[exit_idx] = cum / 1e9
+        out[N_EXITS] = cum / 1e9
+        return out

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device (the dry-run, and only the
+# dry-run, forces 512 fake devices — in its own subprocess).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

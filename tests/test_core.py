@@ -1,0 +1,151 @@
+"""GRLE core: quantizer properties, GCN behavior, replay, agent learning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MECGraph,
+    ReplayBuffer,
+    binary_order_preserving,
+    build_graph,
+    make_agent,
+    max_candidates,
+    one_hot_candidates,
+)
+from repro.core import gcn
+from repro.mec import MECConfig, MECEnv
+
+SET = dict(deadline=None, max_examples=25)
+
+
+# ------------------------------------------------------------------ quantizer
+@given(m=st.integers(1, 8), o=st.integers(2, 12), seed=st.integers(0, 9999))
+@settings(**SET)
+def test_candidates_properties(m, o, seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.random((m, o)), jnp.float32)
+    s = min(m * o, max_candidates(m, o))
+    cands = one_hot_candidates(scores, s)
+    assert cands.shape == (s, m)
+    assert cands.dtype == jnp.int32
+    # candidate 0 is the argmax decision
+    np.testing.assert_array_equal(np.asarray(cands[0]),
+                                  np.asarray(jnp.argmax(scores, -1)))
+    # all entries valid options
+    assert np.all((np.asarray(cands) >= 0) & (np.asarray(cands) < o))
+    # each later candidate differs from candidate 0 in at most one device
+    base = np.asarray(cands[0])
+    for srow in np.asarray(cands[1:]):
+        assert (srow != base).sum() <= 1
+
+
+def test_candidates_margin_order():
+    """Flips happen in ascending margin order."""
+    scores = jnp.asarray([[0.9, 0.8, 0.1], [0.7, 0.1, 0.65]], jnp.float32)
+    cands = np.asarray(one_hot_candidates(scores, 3))
+    # device 1's margin (0.05) < device 0's (0.1): first flip on device 1
+    assert cands[1][1] == 2 and cands[1][0] == 0
+    assert cands[2][0] == 1 and cands[2][1] == 0
+
+
+@given(m=st.integers(1, 10), seed=st.integers(0, 9999))
+@settings(**SET)
+def test_binary_order_preserving(m, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(m), jnp.float32)
+    cands = binary_order_preserving(x, m + 1)
+    base = np.asarray(x > 0.5, np.int32)
+    np.testing.assert_array_equal(np.asarray(cands[0]), base)
+    dist = np.abs(np.asarray(x) - 0.5)
+    order = np.argsort(dist)
+    for s in range(1, m + 1):
+        diff = np.flatnonzero(np.asarray(cands[s]) != base)
+        assert len(diff) == 1 and diff[0] == order[s - 1]
+
+
+# ----------------------------------------------------------------------- GCN
+def _graph(key, m=5, n=2, L=5, device_id=True):
+    env = MECEnv(MECConfig(n_devices=m, n_servers=n))
+    tasks = env.sample_slot(key)
+    return env, build_graph(env.observe(env.reset(), tasks), n, env.L,
+                            device_id=device_id)
+
+
+def test_gcn_shapes(key):
+    env, g = _graph(key)
+    params = gcn.init(key, g.device_feat.shape[-1], g.option_feat.shape[-1])
+    x_hat, logits = gcn.apply(params, g)
+    assert x_hat.shape == (env.M, env.N * env.L)
+    assert bool(jnp.all((x_hat >= 0) & (x_hat <= 1)))
+
+
+def test_gcn_device_permutation_equivariance(key):
+    """Without the id feature, permuting device nodes permutes scores."""
+    env, g = _graph(key, m=6, device_id=False)
+    params = gcn.init(key, g.device_feat.shape[-1], g.option_feat.shape[-1])
+    x1, _ = gcn.apply(params, g)
+    perm = jnp.asarray([3, 1, 5, 0, 4, 2])
+    g2 = MECGraph(g.device_feat[perm], g.option_feat, g.adj[perm],
+                  g.mask[perm])
+    x2, _ = gcn.apply(params, g2)
+    np.testing.assert_allclose(np.asarray(x1[perm]), np.asarray(x2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_gcn_masks_disconnected(key):
+    env, g = _graph(key)
+    mask = g.mask.at[0, :].set(0.0)
+    g = MECGraph(g.device_feat, g.option_feat, g.adj * mask, mask)
+    params = gcn.init(key, g.device_feat.shape[-1], g.option_feat.shape[-1])
+    x_hat, _ = gcn.apply(params, g)
+    assert float(jnp.max(x_hat[0])) < 1e-6
+
+
+# --------------------------------------------------------------------- replay
+def test_replay_ring(key):
+    env, g = _graph(key)
+    buf = ReplayBuffer(capacity=4)
+    for i in range(7):
+        buf.add(g, np.full((env.M,), i))
+    assert len(buf) == 4
+    graphs, dec = buf.sample(8)
+    assert dec.shape[1] == env.M
+    assert set(np.unique(dec)).issubset({3, 4, 5, 6})
+
+
+# ---------------------------------------------------------------------- agent
+def test_agent_trains_and_loss_decreases(key):
+    env = MECEnv(MECConfig(n_devices=6))
+    agent = make_agent("grle", env, key)
+    state = env.reset()
+    k = key
+    for _ in range(60):
+        k, sk = jax.random.split(k)
+        tasks = env.sample_slot(sk)
+        dec, _ = agent.act(state, tasks)
+        state, _ = env.step(state, tasks, dec)
+    losses = agent.loss_history
+    assert len(losses) >= 4
+    assert np.mean(losses[-2:]) < np.mean(losses[:2])
+
+
+def test_no_early_exit_mask():
+    env = MECEnv(MECConfig(n_devices=4))
+    key = jax.random.PRNGKey(1)
+    agent = make_agent("droo", env, key)
+    state = env.reset()
+    tasks = env.sample_slot(key)
+    dec, _ = agent.act(state, tasks, train=False)
+    # DROO may only pick the final exit
+    assert np.all(np.asarray(dec) % env.L == env.L - 1)
+
+
+def test_all_four_methods_run(key):
+    env = MECEnv(MECConfig(n_devices=4))
+    state = env.reset()
+    tasks = env.sample_slot(key)
+    for m in ("grle", "grl", "droo", "drooe"):
+        agent = make_agent(m, env, key)
+        dec, info = agent.act(state, tasks, train=False)
+        assert dec.shape == (4,)

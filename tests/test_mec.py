@@ -1,0 +1,152 @@
+"""MEC simulator invariants (Eqs 1-11) — unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.mec import MECConfig, MECEnv
+
+SET = dict(deadline=None, max_examples=20)
+
+
+def make_env(m=6, n=2, **kw):
+    return MECEnv(MECConfig(n_devices=m, n_servers=n, **kw))
+
+
+def random_decision(env, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, env.N * env.L, env.M), jnp.int32)
+
+
+class TestPhysics:
+    def test_waiting_time_nonnegative(self, key):
+        env = make_env()
+        st_ = env.reset()
+        tasks = env.sample_slot(key)
+        _, res = env.step(st_, tasks, random_decision(env))
+        assert bool(jnp.all(res.t_wait >= -1e-6))
+
+    def test_completion_decomposition(self, key):
+        """Eq 8: t_total = t_com + t_wait + t_cmp."""
+        env = make_env()
+        tasks = env.sample_slot(key)
+        _, res = env.step(env.reset(), tasks, random_decision(env))
+        recon = res.t_com + res.t_wait + res.t_cmp
+        np.testing.assert_allclose(np.asarray(res.t_total),
+                                   np.asarray(recon), rtol=1e-5)
+
+    def test_fcfs_no_server_overlap(self, key):
+        """Tasks on one ES must not overlap: sum of cmp <= makespan."""
+        env = make_env(m=8)
+        tasks = env.sample_slot(key)
+        dec = random_decision(env)
+        _, res = env.step(env.reset(), tasks, dec)
+        n_idx = np.asarray(dec) // env.L
+        start = np.asarray(res.t_com + res.t_wait)  # service start (rel)
+        dur = np.asarray(res.t_cmp)
+        for srv in range(env.N):
+            sel = n_idx == srv
+            if sel.sum() < 2:
+                continue
+            s, d = start[sel], dur[sel]
+            order = np.argsort(s)
+            ends = (s + d)[order]
+            starts = s[order]
+            assert np.all(starts[1:] >= ends[:-1] - 1e-5)
+
+    def test_queue_state_carries_across_slots(self, key):
+        env = make_env()
+        st0 = env.reset()
+        tasks = env.sample_slot(key)
+        dec = random_decision(env)
+        st1, _ = env.step(st0, tasks, dec)
+        assert bool(jnp.all(st1.es_free >= st0.es_free))
+        assert int(st1.slot) == 1
+
+    def test_reward_bounds(self, key):
+        """0 <= Q <= Σ_m max_acc * 0.5 (ψ(0) = 1/2)."""
+        env = make_env()
+        tasks = env.sample_slot(key)
+        _, res = env.step(env.reset(), tasks, random_decision(env))
+        ub = env.M * float(env.exit_acc.max()) * 0.5
+        assert 0.0 <= float(res.reward) <= ub + 1e-6
+
+    def test_success_iff_deadline(self, key):
+        env = make_env(m=10)
+        tasks = env.sample_slot(key)
+        _, res = env.step(env.reset(), tasks, random_decision(env))
+        expect = np.asarray(res.t_total) <= np.asarray(tasks.deadline_s)
+        np.testing.assert_array_equal(np.asarray(res.success), expect)
+
+    def test_evaluate_matches_step_when_estimates_exact(self, key):
+        """With no jitter/CSI error the critic's Q equals realized Q."""
+        env = make_env()
+        tasks = env.sample_slot(key)
+        dec = random_decision(env)
+        q = env.evaluate(env.reset(), tasks, dec[None])
+        _, res = env.step(env.reset(), tasks, dec)
+        np.testing.assert_allclose(float(q[0]), float(res.reward), rtol=1e-5)
+
+    def test_estimates_differ_under_csi_error(self, key):
+        env = make_env(csi_error=0.2, inference_jitter=0.25)
+        tasks = env.sample_slot(key)
+        assert not np.allclose(np.asarray(tasks.rate_true),
+                               np.asarray(tasks.rate_est))
+        assert not np.allclose(np.asarray(tasks.cmp_true),
+                               np.asarray(tasks.cmp_est))
+
+
+class TestOracles:
+    def test_greedy_beats_random(self, key):
+        env = make_env(m=5)
+        tasks = env.sample_slot(key)
+        st_ = env.reset()
+        g = env.greedy_decision(st_, tasks)
+        qg = float(env.evaluate(st_, tasks, g[None])[0])
+        rng = np.random.default_rng(0)
+        rand = jnp.asarray(rng.integers(0, env.N * env.L, (16, env.M)),
+                           jnp.int32)
+        qr = env.evaluate(st_, tasks, rand)
+        assert qg >= float(jnp.max(qr)) - 1e-6
+
+    @pytest.mark.slow
+    def test_greedy_near_exhaustive_small(self, key):
+        env = make_env(m=3)
+        tasks = env.sample_slot(key)
+        st_ = env.reset()
+        g = env.greedy_decision(st_, tasks, sweeps=3)
+        e = env.exhaustive_decision(st_, tasks)
+        qg = float(env.evaluate(st_, tasks, g[None])[0])
+        qe = float(env.evaluate(st_, tasks, e[None])[0])
+        assert qg >= 0.98 * qe
+
+
+@given(m=st.integers(2, 10), seed=st.integers(0, 10_000))
+@settings(**SET)
+def test_property_no_decision_beats_physics(m, seed):
+    """For any decision, every component time is nonnegative and t_com
+    matches d/r exactly (Eq 1)."""
+    env = make_env(m=m)
+    tasks = env.sample_slot(jax.random.PRNGKey(seed))
+    dec = random_decision(env, seed)
+    _, res = env.step(env.reset(), tasks, dec)
+    n_idx = np.asarray(dec) // env.L
+    r = np.asarray(tasks.rate_true)[np.arange(m), n_idx]
+    np.testing.assert_allclose(np.asarray(res.t_com),
+                               np.asarray(tasks.size_bits) / r, rtol=1e-5)
+    assert np.all(np.asarray(res.t_cmp) > 0)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SET)
+def test_property_early_exit_dominates_compute_time(seed):
+    """Choosing an earlier exit on the same ES never increases t_cmp."""
+    env = make_env(m=4)
+    tasks = env.sample_slot(jax.random.PRNGKey(seed))
+    st_ = env.reset()
+    base = jnp.full((4,), env.L - 1, jnp.int32)        # ES 0, last exit
+    early = jnp.zeros((4,), jnp.int32)                 # ES 0, first exit
+    _, res_last = env.step(st_, tasks, base)
+    _, res_first = env.step(st_, tasks, early)
+    assert float(res_first.t_cmp.sum()) <= float(res_last.t_cmp.sum())

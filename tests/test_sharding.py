@@ -1,0 +1,81 @@
+"""Partition rules: every spec divides its dim on both production meshes.
+
+Pure spec-level checks (no 512-device compile here — that's the dry-run's
+job, in its own subprocess)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import INPUT_SHAPES, model_for
+from repro.sharding.partition import cache_pspecs, param_pspecs
+
+
+class FakeMesh:
+    """Shape-only stand-in (param_pspecs only reads mesh.shape)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+MESHES = {
+    "single": FakeMesh(data=16, model=16),
+    "multi": FakeMesh(pod=2, data=16, model=16),
+}
+
+
+def axis_size(mesh, ax):
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def check_tree(spec_tree, shape_tree, mesh):
+    specs = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    shapes = jax.tree_util.tree_leaves(shape_tree)
+    assert len(specs) == len(shapes)
+    for spec, arr in zip(specs, shapes):
+        assert len(spec) <= len(arr.shape), (spec, arr.shape)
+        for dim, ax in zip(arr.shape, spec):
+            if ax is not None:
+                assert dim % axis_size(mesh, ax) == 0, (spec, arr.shape, ax)
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divide(arch, mesh_name):
+    cfg = get_arch(arch)
+    mesh = MESHES[mesh_name]
+    model = model_for(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+    specs = param_pspecs(cfg, shapes, mesh)
+    check_tree(specs, shapes, mesh)
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divide(arch, mesh_name, shape_name):
+    from repro.launch.specs import arch_for_shape
+    spec = INPUT_SHAPES[shape_name]
+    cfg = arch_for_shape(get_arch(arch), spec)
+    mesh = MESHES[mesh_name]
+    model = model_for(cfg)
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(cfg, spec.global_batch, spec.seq_len))
+    specs = cache_pspecs(cfg, shapes, mesh, spec.seq_len)
+    check_tree(specs, shapes, mesh)
+
+
+def test_model_dims_shard_something():
+    """Sanity: the big matmul weights actually get a model axis."""
+    cfg = get_arch("llama3_2_1b")
+    mesh = MESHES["single"]
+    model = model_for(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+    specs = param_pspecs(cfg, shapes, mesh)
+    assert specs["blocks"]["attn"]["wq"]["w"] == P(None, None, "model")
+    assert specs["blocks"]["ffn"]["w2"]["w"] == P(None, "model", None)
+    assert specs["lm_head"]["w"] == P(None, "model")

@@ -1,0 +1,80 @@
+"""Linear-recurrence math: chunked vs naive vs single-step (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import (
+    chunked_linear_attn,
+    linear_attn_step,
+    naive_linear_attn,
+)
+
+SET = dict(deadline=None, max_examples=15)
+
+
+def make(seed, b, t, h, dk, dv, rwkv):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, t, h, dk))
+    k = jax.random.normal(ks[1], (b, t, h, dk))
+    v = jax.random.normal(ks[2], (b, t, h, dv))
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, t, h, dk)) * 0.5)
+    u = 0.3 * jax.random.normal(ks[4], (h, dk)) if rwkv else None
+    return q, k, v, logw, u
+
+
+@given(seed=st.integers(0, 9999), chunk=st.sampled_from([4, 8, 16, 32]),
+       rwkv=st.booleans())
+@settings(**SET)
+def test_chunked_matches_naive(seed, chunk, rwkv):
+    q, k, v, logw, u = make(seed, 2, 32, 2, 8, 8, rwkv)
+    y1, s1 = chunked_linear_attn(q, k, v, logw, chunk=chunk, bonus_u=u)
+    y2, s2 = naive_linear_attn(q, k, v, logw, bonus_u=u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 9999), rwkv=st.booleans())
+@settings(**SET)
+def test_chunked_state_handoff(seed, rwkv):
+    """Processing [0:16] then [16:32] with carried state == one shot."""
+    q, k, v, logw, u = make(seed, 1, 32, 2, 8, 8, rwkv)
+    y_full, s_full = chunked_linear_attn(q, k, v, logw, chunk=8, bonus_u=u)
+    y_a, s_a = chunked_linear_attn(q[:, :16], k[:, :16], v[:, :16],
+                                   logw[:, :16], chunk=8, bonus_u=u)
+    y_b, s_b = chunked_linear_attn(q[:, 16:], k[:, 16:], v[:, 16:],
+                                   logw[:, 16:], chunk=8, bonus_u=u,
+                                   initial_state=s_a)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y_a, y_b], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_b), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_step_matches_chunked_prefix():
+    """Decode steps continue exactly where a chunked prefill left off."""
+    q, k, v, logw, u = make(7, 1, 24, 2, 8, 8, True)
+    y_full, _ = chunked_linear_attn(q, k, v, logw, chunk=8, bonus_u=u)
+    _, s16 = chunked_linear_attn(q[:, :16], k[:, :16], v[:, :16],
+                                 logw[:, :16], chunk=8, bonus_u=u)
+    s = s16
+    for t in range(16, 24):
+        y, s = linear_attn_step(q[:, t], k[:, t], v[:, t], logw[:, t], s,
+                                bonus_u=u)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_full[:, t]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_extreme_decay_no_overflow():
+    """Very fast decay (log_w << 0) must stay finite (clamp path)."""
+    b, t, h, dk, dv = 1, 64, 1, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, t, h, dk))
+    k = jax.random.normal(ks[1], (b, t, h, dk))
+    v = jax.random.normal(ks[2], (b, t, h, dv))
+    logw = jnp.full((b, t, h, dk), -5.0)
+    y, s = chunked_linear_attn(q, k, v, logw, chunk=32)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.all(jnp.isfinite(s)))
