@@ -1,0 +1,105 @@
+"""Rollout throughput: per-slot Python loop vs scan-fused driver.
+
+    PYTHONPATH=src python -m benchmarks.rollout_throughput [--quick]
+
+Three measured paths, all with training on (Algorithm 1 end-to-end):
+
+* ``legacy``  — the pre-rollout structure: ``env.sample_slot`` ->
+  ``OffloadingAgent.act`` -> ``env.step`` dispatched from Python each
+  slot, host-side replay, host round-trips throughout;
+* ``driver_loop`` — the fused slot body jitted once but still dispatched
+  per slot (isolates host-dispatch overhead from fusion);
+* ``scan``    — one compiled ``lax.scan`` episode.
+
+Reports slots/sec and speedups; the acceptance bar is scan >= 5x legacy
+at M=14, N=3, T=500 on CPU. Scaling rows show the scan path amortizing
+over B fleets (fleet-slots/sec).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_rows
+from repro.core import make_agent
+from repro.mec import MECConfig, MECEnv
+from repro.rollout import RolloutDriver
+
+
+def _legacy_slots_per_s(env, key, n_slots):
+    agent = make_agent("grle", env, key)
+    state = env.reset()
+    # warm the compiled pieces so timing excludes compilation
+    k = key
+    for _ in range(3):
+        k, sk = jax.random.split(k)
+        tasks = env.sample_slot(sk)
+        dec, _ = agent.act(state, tasks)
+        state, _ = env.step(state, tasks, dec)
+    agent = make_agent("grle", env, key)
+    state = env.reset()
+    t0 = time.perf_counter()
+    k = key
+    for _ in range(n_slots):
+        k, sk = jax.random.split(k)
+        tasks = env.sample_slot(sk)
+        dec, _ = agent.act(state, tasks)
+        state, _ = env.step(state, tasks, dec)
+    jax.block_until_ready(state)
+    return n_slots / (time.perf_counter() - t0)
+
+
+def _driver_slots_per_s(env, key, n_slots, *, mode, n_fleets=1):
+    agent = make_agent("grle", env, key)
+    drv = RolloutDriver(agent, n_fleets=n_fleets)
+    carry, trace = drv.run(key, n_slots, mode=mode)    # compile + warm
+    jax.block_until_ready(trace.reward)
+    t0 = time.perf_counter()
+    carry, trace = drv.run(key, n_slots, mode=mode)
+    jax.block_until_ready(trace.reward)
+    return n_slots / (time.perf_counter() - t0)
+
+
+def run(quick: bool = False):
+    m, n, t = (8, 2, 100) if quick else (14, 3, 500)
+    env = MECEnv(MECConfig(n_devices=m, n_servers=n))
+    key = jax.random.PRNGKey(0)
+
+    legacy = _legacy_slots_per_s(env, key, t)
+    loop = _driver_slots_per_s(env, key, t, mode="loop")
+    scan = _driver_slots_per_s(env, key, t, mode="scan")
+
+    rows = []
+
+    def row(name, sps, derived):
+        rows.append({"name": name, "us_per_call": round(1e6 / sps, 1),
+                     "derived": derived})
+        print(f"  {name:24s} {sps:10.1f} slots/s  {derived}", flush=True)
+
+    shape = f"M={m} N={n} T={t}"
+    row("rollout/legacy_loop", legacy, shape)
+    row("rollout/driver_loop", loop,
+        f"{shape} speedup_vs_legacy={loop / legacy:.1f}x")
+    row("rollout/scan", scan,
+        f"{shape} speedup_vs_legacy={scan / legacy:.1f}x "
+        f"speedup_vs_driver_loop={scan / loop:.1f}x")
+
+    # fleet scaling: fused episodes amortize over batched fleets
+    for b in (4, 16) if not quick else (4,):
+        sps = _driver_slots_per_s(env, key, t, mode="scan", n_fleets=b)
+        row(f"rollout/scan_B{b}", sps * b,
+            f"{shape} B={b} fleet-slots/s ({sps:.1f} slots/s wall)")
+
+    save_rows("rollout_throughput", rows)
+    print(f"  => scan vs legacy: {scan / legacy:.1f}x "
+          f"(acceptance floor 5x)", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

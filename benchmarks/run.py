@@ -12,6 +12,7 @@
 | imperfect_csi       | Fig 8                              |
 | kernels             | kernel microbench (us_per_call)    |
 | roofline            | deliverable (g), from the dry-run  |
+| rollout_throughput  | scan-fused vs per-slot loop        |
 """
 from __future__ import annotations
 
@@ -75,7 +76,8 @@ def bench_kernels(quick: bool = False):
 
 
 BENCHES = ("exit_profile", "convergence", "vary_devices", "vary_capacity",
-           "vary_inference_time", "imperfect_csi", "kernels", "roofline")
+           "vary_inference_time", "imperfect_csi", "kernels", "roofline",
+           "rollout_throughput")
 
 
 def main() -> None:
@@ -119,6 +121,9 @@ def main() -> None:
             elif "final_moving_Qhat" in r:
                 print(f"{name}/{r['method']},,Qhat="
                       f"{r['final_moving_Qhat']:.3f}")
+            elif "final_moving_reward" in r:
+                print(f"{name}/{r['method']},,reward="
+                      f"{r['final_moving_reward']:.3f}")
             elif "dominant" in r:
                 print(f"{name}/{r['arch']}-{r['shape']},,dom={r['dominant']};"
                       f"useful={r['useful_fraction']:.2f}")

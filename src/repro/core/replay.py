@@ -32,8 +32,14 @@ class ReplayBuffer:
         return self._size
 
     def sample(self, batch_size: int):
-        """Random minibatch -> (MECGraph of stacked tensors, decisions [B, M])."""
-        idx = self._rng.integers(0, self._size, size=min(batch_size, self._size))
+        """Random minibatch -> (MECGraph of stacked tensors, decisions [B, M]).
+
+        Sampled without replacement whenever the buffer holds enough entries
+        (duplicates would skew the Eq-16 minibatch loss toward repeated
+        slots); the batch shrinks to the buffer size otherwise.
+        """
+        n = min(batch_size, self._size)
+        idx = self._rng.choice(self._size, size=n, replace=False)
         graphs, decisions = zip(*(self._store[i] for i in idx))
         stacked = MECGraph(*(np.stack(parts) for parts in zip(*graphs)))
         return stacked, np.stack(decisions)

@@ -33,6 +33,16 @@ class MECConfig:
     csi_error: float = 0.0                               # ±fraction rate estimate error
     connectivity_drop: float = 0.0                       # P(device-ES link down)
     early_exit: bool = True              # False => only the final exit is usable
+    # Fleet-rollout workload dynamics (repro/rollout/workloads.py). "iid"
+    # reproduces the paper's per-slot draws (every device active, fresh
+    # uniform rates/capacity each slot); "poisson"/"mmpp" drive the
+    # ``active`` mask from stochastic arrival processes.
+    workload: str = "iid"                # "iid" | "poisson" | "mmpp"
+    arrival_rate: float = 1.0            # per-device P(task per slot), poisson
+    mmpp_rates: Tuple[float, float] = (0.25, 0.95)   # calm/burst arrival prob
+    mmpp_switch: Tuple[float, float] = (0.08, 0.25)  # P(calm->burst), P(burst->calm)
+    churn_prob: float = 0.0              # per-slot P(device joins/leaves fleet)
+    ar1_rho: float = 0.0                 # AR(1) autocorr of rates & ES capacity
 
     def __post_init__(self):
         if self.exit_times_s is None:

@@ -61,6 +61,40 @@ def _arrays(cfg: MECConfig):
             jnp.asarray(cfg.accuracies(), jnp.float32))
 
 
+def assemble_slot(cfg: MECConfig, exit_times: jax.Array, *,
+                  rate_true: jax.Array, capacity: jax.Array,
+                  active: jax.Array, k_size, k_csi, k_jitter,
+                  k_connect) -> SlotTasks:
+    """Finish a slot draw from given rates/capacity/active mask.
+
+    Task sizes, CSI-error estimates, inference jitter and connectivity
+    (with the never-lose-every-link fallback) live here, shared between
+    ``MECEnv.sample_slot`` (iid rates/capacity) and the rollout workload
+    generators (AR(1)/arrival-driven), so the draw semantics cannot drift
+    between the two paths.
+    """
+    m, n = rate_true.shape
+    l = exit_times.shape[-1]
+    kb_lo, kb_hi = cfg.task_kbytes
+    size_bits = jax.random.uniform(k_size, (m,), minval=kb_lo,
+                                   maxval=kb_hi) * 8e3  # KBytes -> bits
+    eps = jax.random.uniform(k_csi, (m, n), minval=-cfg.csi_error,
+                             maxval=cfg.csi_error)
+    rate_est = rate_true * (1.0 + eps)
+    jit = jax.random.uniform(k_jitter, (n, l), minval=-cfg.inference_jitter,
+                             maxval=cfg.inference_jitter)
+    cmp_base = exit_times / capacity[:, None]
+    cmp_true = cmp_base * (1.0 + jit)
+    connect = (jax.random.uniform(k_connect, (m, n))
+               >= cfg.connectivity_drop).astype(jnp.float32)
+    # never let a device lose every link
+    has_link = connect.sum(-1, keepdims=True) > 0
+    connect = jnp.where(has_link, connect, jnp.ones_like(connect))
+    deadline = jnp.full((m,), cfg.deadline_s, jnp.float32)
+    return SlotTasks(size_bits, deadline, rate_true, rate_est, capacity,
+                     cmp_true, cmp_base, connect, active)
+
+
 class MECEnv:
     """Stateless-core environment; state is threaded explicitly."""
 
@@ -82,32 +116,16 @@ class MECEnv:
     def sample_slot(self, key: jax.Array) -> SlotTasks:
         cfg = self.cfg
         ks = jax.random.split(key, 7)
-        kb_lo, kb_hi = cfg.task_kbytes
-        size_bits = jax.random.uniform(ks[0], (self.M,), minval=kb_lo, maxval=kb_hi) \
-            * 8e3  # KBytes -> bits
         r_lo, r_hi = cfg.rate_mbps
         rate_true = jax.random.uniform(ks[1], (self.M, self.N),
                                        minval=r_lo, maxval=r_hi) * 1e6
-        eps = jax.random.uniform(ks[2], (self.M, self.N),
-                                 minval=-cfg.csi_error, maxval=cfg.csi_error)
-        rate_est = rate_true * (1.0 + eps)
         c_lo, c_hi = cfg.capacity_range
         capacity = jax.random.uniform(ks[3], (self.N,), minval=c_lo, maxval=c_hi)
-        jit = jax.random.uniform(ks[4], (self.N, self.L),
-                                 minval=-cfg.inference_jitter,
-                                 maxval=cfg.inference_jitter)
-        cmp_base = self.exit_times / capacity[:, None]
-        cmp_true = cmp_base * (1.0 + jit)
-        connect = (jax.random.uniform(ks[5], (self.M, self.N))
-                   >= cfg.connectivity_drop).astype(jnp.float32)
-        # never let a device lose every link
-        has_link = connect.sum(-1, keepdims=True) > 0
-        connect = jnp.where(has_link, connect,
-                            jnp.ones_like(connect))
-        active = jnp.ones((self.M,), jnp.float32)
-        deadline = jnp.full((self.M,), cfg.deadline_s, jnp.float32)
-        return SlotTasks(size_bits, deadline, rate_true, rate_est,
-                         capacity, cmp_true, cmp_base, connect, active)
+        return assemble_slot(cfg, self.exit_times,
+                             rate_true=rate_true, capacity=capacity,
+                             active=jnp.ones((self.M,), jnp.float32),
+                             k_size=ks[0], k_csi=ks[2], k_jitter=ks[4],
+                             k_connect=ks[5])
 
     # ------------------------------------------------------------ core physics
     def _simulate(self, state: MECState, tasks: SlotTasks, decision: jax.Array,

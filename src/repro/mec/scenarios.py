@@ -25,6 +25,18 @@ SCENARIOS = {
     # extra (beyond-paper) stressor: dynamic topology
     "dyn_topology": dict(capacity_range=(0.25, 1.0), inference_jitter=0.25,
                          csi_error=0.20, connectivity_drop=0.15),
+    # Beyond-paper dynamic workloads (repro/rollout/workloads.py): the
+    # ``active`` mask follows a stochastic arrival process instead of the
+    # paper's always-on fleet, and channel/capacity may be time-correlated.
+    "dyn_poisson": dict(capacity_range=(0.25, 1.0), workload="poisson",
+                        arrival_rate=0.7),
+    "dyn_bursty": dict(capacity_range=(0.25, 1.0), workload="mmpp",
+                       mmpp_rates=(0.2, 0.95), mmpp_switch=(0.05, 0.2)),
+    "dyn_churn": dict(capacity_range=(0.25, 1.0), workload="poisson",
+                      arrival_rate=0.8, churn_prob=0.02),
+    "dyn_markov_channel": dict(capacity_range=(0.25, 1.0), workload="poisson",
+                               arrival_rate=0.9, ar1_rho=0.9,
+                               inference_jitter=0.25, csi_error=0.20),
 }
 
 

@@ -1,0 +1,29 @@
+"""Vectorized fleet rollouts: batched envs + scan-fused episodes.
+
+Three layers (see driver.py docstring):
+  vecenv    — vmap-batched fleets of one MECEnv
+  replay    — device-resident functional ring buffer
+  driver    — lax.scan-fused train/eval episodes
+  workloads — stochastic arrival/channel generators (dyn_* scenarios)
+"""
+from repro.rollout.vecenv import VecMECEnv
+from repro.rollout.replay import (
+    DeviceReplay,
+    replay_init,
+    replay_add,
+    replay_sample,
+)
+from repro.rollout.workloads import WorkloadGen, WorkloadState, make_workload
+from repro.rollout.driver import (
+    RolloutCarry,
+    RolloutDriver,
+    RolloutTrace,
+    trace_metrics,
+)
+
+__all__ = [
+    "VecMECEnv",
+    "DeviceReplay", "replay_init", "replay_add", "replay_sample",
+    "WorkloadGen", "WorkloadState", "make_workload",
+    "RolloutCarry", "RolloutDriver", "RolloutTrace", "trace_metrics",
+]

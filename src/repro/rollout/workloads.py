@@ -1,0 +1,144 @@
+"""Stochastic workload generators for fleet rollouts.
+
+The paper evaluates GRLE on iid per-slot draws with every device active.
+Real MEC traffic is neither: arrivals are bursty, devices churn, and both
+wireless rates and ES capacity are time-correlated. This module supplies
+``SlotTasks`` streams as *pure functions of an explicit generator state*,
+so they compose with ``vmap`` (fleets) and ``lax.scan`` (episodes):
+
+    gen = make_workload(env)
+    wl  = gen.init(key)
+    wl, tasks = gen.sample(wl, key_k)      # one slot
+
+Three arrival processes, selected by ``MECConfig.workload``:
+
+* ``iid``     — delegates to ``MECEnv.sample_slot`` bit-for-bit, so legacy
+  per-slot loops and the scan driver agree exactly.
+* ``poisson`` — Bernoulli thinning of a Poisson process: each member device
+  generates a task with probability ``cfg.arrival_rate`` per slot.
+* ``mmpp``    — two-state Markov-modulated Poisson process: a global
+  calm/burst mode switches with ``cfg.mmpp_switch`` and modulates the
+  per-device arrival probability between ``cfg.mmpp_rates``.
+
+Orthogonal dynamics applied on top of ``poisson``/``mmpp``:
+
+* device churn  — members leave/join the fleet w.p. ``cfg.churn_prob``/slot;
+* AR(1) rates   — uplink rates and ES capacity follow a mean-reverting
+  Gaussian AR(1) with coefficient ``cfg.ar1_rho`` (variance matched to the
+  iid uniform draw), clipped to the configured ranges.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mec.config import MECConfig
+from repro.mec.env import MECEnv, SlotTasks, assemble_slot
+
+
+class WorkloadState(NamedTuple):
+    """Generator state threaded through a rollout (one fleet's view)."""
+    rate_true: jax.Array   # [M, N] bps — AR(1)-correlated when ar1_rho > 0
+    capacity: jax.Array    # [N] available ES fraction
+    member: jax.Array      # [M] 1.0 while the device belongs to the fleet
+    burst: jax.Array       # scalar int32, MMPP mode (0 = calm, 1 = burst)
+
+
+class WorkloadGen:
+    """Arrival/channel process for one ``MECEnv`` (see module docstring)."""
+
+    def __init__(self, env: MECEnv):
+        cfg = env.cfg
+        if cfg.workload not in ("iid", "poisson", "mmpp"):
+            raise ValueError(f"unknown workload {cfg.workload!r}")
+        self.env = env
+        self.cfg = cfg
+        self.kind = cfg.workload
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> WorkloadState:
+        cfg, M, N = self.cfg, self.env.M, self.env.N
+        kr, kc = jax.random.split(key)
+        r_lo, r_hi = cfg.rate_mbps
+        c_lo, c_hi = cfg.capacity_range
+        # start from the stationary (uniform) marginals so short rollouts
+        # are not biased by a burn-in transient
+        rate = jax.random.uniform(kr, (M, N), minval=r_lo, maxval=r_hi) * 1e6
+        cap = jax.random.uniform(kc, (N,), minval=c_lo, maxval=c_hi)
+        return WorkloadState(
+            rate_true=rate.astype(jnp.float32),
+            capacity=cap.astype(jnp.float32),
+            member=jnp.ones((M,), jnp.float32),
+            burst=jnp.zeros((), jnp.int32),
+        )
+
+    # ---------------------------------------------------------------- sample
+    def sample(self, state: WorkloadState, key: jax.Array):
+        """Draw one slot -> (new state, SlotTasks)."""
+        if self.kind == "iid":
+            return state, self.env.sample_slot(key)
+
+        cfg, env = self.cfg, self.env
+        M, N, L = env.M, env.N, env.L
+        ks = jax.random.split(key, 9)
+
+        # --- arrival process -> active mask
+        if self.kind == "poisson":
+            burst = state.burst
+            p_arr = jnp.float32(min(max(cfg.arrival_rate, 0.0), 1.0))
+        else:  # mmpp
+            p_cb, p_bc = cfg.mmpp_switch
+            u = jax.random.uniform(ks[0])
+            flip = jnp.where(state.burst == 0, u < p_cb, u < p_bc)
+            burst = jnp.where(flip, 1 - state.burst, state.burst)
+            p_arr = jnp.where(burst == 0, cfg.mmpp_rates[0], cfg.mmpp_rates[1])
+        arrive = jax.random.bernoulli(ks[1], p_arr, (M,))
+
+        # --- device churn
+        if cfg.churn_prob > 0:
+            toggle = jax.random.bernoulli(ks[2], cfg.churn_prob, (M,))
+            member = jnp.where(toggle, 1.0 - state.member, state.member)
+        else:
+            member = state.member
+        active = arrive.astype(jnp.float32) * member
+
+        # --- time-correlated channel/capacity (AR(1) when configured,
+        # else fresh uniform as in sample_slot)
+        r_lo, r_hi = cfg.rate_mbps
+        rate_true = self._ar1(ks[3], state.rate_true, (M, N),
+                              lo=r_lo * 1e6, hi=r_hi * 1e6)
+        c_lo, c_hi = cfg.capacity_range
+        capacity = self._ar1(ks[5], state.capacity, (N,), lo=c_lo, hi=c_hi)
+
+        new_state = WorkloadState(rate_true=rate_true, capacity=capacity,
+                                  member=member, burst=burst)
+        # sizes / CSI estimates / jitter / connectivity share sample_slot's
+        # draw semantics via assemble_slot
+        tasks = assemble_slot(cfg, env.exit_times,
+                              rate_true=rate_true, capacity=capacity,
+                              active=active, k_size=ks[7], k_csi=ks[4],
+                              k_jitter=ks[6], k_connect=ks[8])
+        return new_state, tasks
+
+    # ----------------------------------------------------------------- utils
+    def _ar1(self, key, prev, shape, *, lo, hi):
+        """Mean-reverting AR(1) step clipped to [lo, hi].
+
+        The innovation variance is chosen so the stationary variance matches
+        the iid uniform draw on [lo, hi] (sigma^2 = (hi-lo)^2 / 12).
+        """
+        rho = self.cfg.ar1_rho
+        if rho <= 0:
+            return jax.random.uniform(key, shape, minval=lo, maxval=hi)
+        mu = 0.5 * (lo + hi)
+        sigma = (hi - lo) / np.sqrt(12.0)
+        noise = jax.random.normal(key, shape) * sigma * np.sqrt(1.0 - rho**2)
+        return jnp.clip(mu + rho * (prev - mu) + noise, lo, hi)
+
+
+def make_workload(env: MECEnv) -> WorkloadGen:
+    """Generator for ``env.cfg.workload`` (see SCENARIOS ``dyn_*`` entries)."""
+    return WorkloadGen(env)

@@ -11,6 +11,11 @@ The MEC simulator supplies the queueing/deadline world model with an
 analytic per-exit latency table (``llm_exit_profile``) in place of
 Table I; the realized latency is whatever the replica actually takes —
 on CPU we charge the analytic table scaled by a per-replica speed factor.
+
+Request load can be externally supplied (``serve_slot(requests)``) or
+arrival-driven (``serve_slot()`` with ``workload="poisson"``/``"mmpp"``):
+the rollout workload generator's ``active`` mask then decides which batch
+slots carry a request each slot.
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ from repro.mec.metrics import RunningMetrics
 from repro.mec.profiles import llm_exit_profile
 from repro.models.config import ArchConfig
 from repro.models.lm import model_for
+from repro.rollout.workloads import make_workload
 from repro.train.steps import make_serve_step
 
 
@@ -49,7 +55,8 @@ class Replica:
 class EdgeServingEngine:
     def __init__(self, cfg: ArchConfig, replicas: list[Replica], *,
                  key=None, cache_len: int = 256, scheduler: str = "grle",
-                 batch_slots: int = 4, seed: int = 0):
+                 batch_slots: int = 4, seed: int = 0,
+                 workload: str = "iid", arrival_rate: float = 0.7):
         key = key if key is not None else jax.random.PRNGKey(seed)
         self.cfg = cfg
         self.model = model_for(cfg)
@@ -78,9 +85,15 @@ class EdgeServingEngine:
             slot_s=deadline / 2, deadline_s=deadline,
             task_kbytes=(4.0, 16.0), rate_mbps=(20.0, 100.0),
             capacity_range=(0.5, 1.0),
+            workload=workload, arrival_rate=arrival_rate,
         )
         self.env = MECEnv(mec_cfg)
         self.mec_state = self.env.reset()
+        # arrival process: with workload != "iid" the generator's ``active``
+        # mask decides which batch slots carry a request each slot
+        self._workload = make_workload(self.env)
+        self._wl_state = self._workload.init(jax.random.fold_in(key, 1))
+        self._req_rng = np.random.default_rng(seed)
         self.agent = (make_agent(scheduler, self.env, key, seed=seed)
                       if scheduler else None)
         self.metrics = RunningMetrics(slot_s=mec_cfg.slot_s)
@@ -117,14 +130,39 @@ class EdgeServingEngine:
         return outs
 
     # -------------------------------------------------------------- serving
-    def serve_slot(self, requests: list[Request], *, decode: bool = False):
+    def make_request(self, prompt_len: int = 8, max_new: int = 8) -> Request:
+        """Synthetic request for arrival-driven serving."""
+        toks = self._req_rng.integers(0, self.cfg.vocab, prompt_len)
+        return Request(tokens=toks.astype(np.int32),
+                       deadline_s=self.env.cfg.deadline_s, max_new=max_new)
+
+    def serve_slot(self, requests: Optional[list[Request]] = None, *,
+                   decode: bool = False):
         """Schedule one slot of requests; optionally run real decoding.
 
-        Returns (assignments [(replica, exit_layer)], slot metrics).
+        With ``requests=None`` the slot's load is arrival-driven: the
+        workload generator's ``active`` mask (Poisson/MMPP per
+        ``MECConfig.workload``) decides which batch slots carry a request,
+        each synthesized by ``make_request`` (the generated requests come
+        back under ``info["requests"]``). Returns (assignments, info) with
+        one ``(replica, exit_layer)`` per request.
         """
-        assert len(requests) <= self.batch_slots
         self._key, sk = jax.random.split(self._key)
-        tasks = self.env.sample_slot(sk)
+        self._wl_state, tasks = self._workload.sample(self._wl_state, sk)
+        if requests is None:
+            active = np.flatnonzero(np.asarray(tasks.active) > 0.5)
+            slot_ids = [int(i) for i in active]
+            requests = [self.make_request() for _ in slot_ids]
+        else:
+            assert len(requests) <= self.batch_slots
+            slot_ids = list(range(len(requests)))
+            if self.env.cfg.workload != "iid":
+                # explicit requests ARE the arrivals: align the simulated
+                # mask so metrics/assignments describe the real requests,
+                # not the generator's draw
+                act = np.zeros((self.batch_slots,), np.float32)
+                act[: len(requests)] = 1.0
+                tasks = tasks._replace(active=jnp.asarray(act))
         if self.agent is not None:
             decision, _ = self.agent.act(self.mec_state, tasks)
         else:  # static: final exit, round-robin replica
@@ -133,12 +171,12 @@ class EdgeServingEngine:
                 [(i % self.env.N) * L + (L - 1)
                  for i in range(self.batch_slots)], jnp.int32)
         self.mec_state, result = self.env.step(self.mec_state, tasks, decision)
-        self.metrics.update(result)
+        self.metrics.update(result, tasks.active)
 
         decision = np.asarray(decision)
         assignments = []
-        for i, req in enumerate(requests):
-            n, l = divmod(int(decision[i]), self.env.L)
+        for slot in slot_ids:
+            n, l = divmod(int(decision[slot]), self.env.L)
             exit_layer = self.cfg.exit_layers[l]
             assignments.append((self.replicas[n].name, exit_layer))
         texts = None
@@ -152,4 +190,6 @@ class EdgeServingEngine:
                 for i, o in zip(idxs, outs):
                     texts[i] = o
         return assignments, {"reward": float(result.reward),
+                             "n_requests": len(requests),
+                             "requests": requests,
                              "texts": texts}

@@ -1,16 +1,27 @@
-"""Msgpack + zstd checkpointing for param/optimizer pytrees."""
+"""Msgpack + zstd checkpointing for param/optimizer pytrees.
+
+``zstandard`` is optional: environments without it fall back to zlib.
+``restore_checkpoint`` sniffs the zstd magic so either format reads back.
+"""
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
 
 from repro.nn.pytree import flatten_dict, unflatten_dict
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _encode_tree(tree) -> dict:
@@ -36,7 +47,10 @@ def _encode_tree(tree) -> dict:
 
 def save_checkpoint(path: str, tree, *, level: int = 3) -> None:
     payload = msgpack.packb(_encode_tree(tree))
-    comp = zstandard.ZstdCompressor(level=level).compress(payload)
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=level).compress(payload)
+    else:
+        comp = zlib.compress(payload, level)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -48,7 +62,14 @@ def restore_checkpoint(path: str, like=None):
     """Restore; if ``like`` is given, reshape into its pytree structure
     (including tuples/NamedTuples), else return a nested dict."""
     with open(path, "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = f.read()
+    if raw[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ImportError(
+                f"{path} is a zstd checkpoint but zstandard is not installed")
+        payload = zstandard.ZstdDecompressor().decompress(raw)
+    else:
+        payload = zlib.decompress(raw)
     flat = msgpack.unpackb(payload)
     arrays = {
         k: jnp.asarray(np.frombuffer(v["data"], dtype=v["dtype"])

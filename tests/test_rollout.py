@@ -1,0 +1,280 @@
+"""Fleet-rollout subsystem: scan/loop equivalence, workload statistics,
+vecenv batch independence, device replay semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ReplayBuffer, build_graph, make_agent
+from repro.mec import MECConfig, MECEnv
+from repro.rollout import (
+    RolloutDriver,
+    VecMECEnv,
+    make_workload,
+    replay_add,
+    replay_init,
+    replay_sample,
+    trace_metrics,
+)
+
+
+def make_env(m=4, n=2, **kw):
+    return MECEnv(MECConfig(n_devices=m, n_servers=n, **kw))
+
+
+def run_workload(env, slots, seed=0):
+    """Collect (states, tasks) from one generator stream."""
+    gen = make_workload(env)
+    key = jax.random.PRNGKey(seed)
+    wl = gen.init(jax.random.fold_in(key, 1))
+    states, tasks_list = [], []
+    step = jax.jit(gen.sample)
+    for k in range(slots):
+        wl, tasks = step(wl, jax.random.fold_in(key, 1000 + k))
+        states.append(wl)
+        tasks_list.append(tasks)
+    return states, tasks_list
+
+
+# ------------------------------------------------------------- equivalence
+class TestScanLoopEquivalence:
+    def test_train_rollout_identical(self, key):
+        env = make_env()
+        agent = make_agent("grle", env, key, buffer_size=32, batch_size=8,
+                           train_every=5)
+        drv = RolloutDriver(agent, n_fleets=2)
+        c1, t1 = drv.run(jax.random.PRNGKey(7), 30, mode="loop")
+        c2, t2 = drv.run(jax.random.PRNGKey(7), 30, mode="scan")
+        np.testing.assert_array_equal(np.asarray(t1.decisions),
+                                      np.asarray(t2.decisions))
+        np.testing.assert_array_equal(np.asarray(t1.reward),
+                                      np.asarray(t2.reward))
+        np.testing.assert_array_equal(np.asarray(t1.loss),
+                                      np.asarray(t2.loss))
+        # params agree to float32 rounding (XLA fuses the train step
+        # differently inside scan; decisions/rewards/losses stay bitwise)
+        for a, b in zip(jax.tree_util.tree_leaves(c1.params),
+                        jax.tree_util.tree_leaves(c2.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-6)
+        # training actually happened inside the scan
+        losses = np.asarray(t2.loss)
+        assert np.isfinite(losses).sum() >= 2
+
+    def test_eval_rollout_identical(self, key):
+        env = make_env(m=5)
+        agent = make_agent("drooe", env, key)
+        drv = RolloutDriver(agent, n_fleets=1, train=False)
+        _, t1 = drv.run(jax.random.PRNGKey(3), 25, mode="loop")
+        _, t2 = drv.run(jax.random.PRNGKey(3), 25, mode="scan")
+        np.testing.assert_array_equal(np.asarray(t1.decisions),
+                                      np.asarray(t2.decisions))
+        np.testing.assert_array_equal(np.asarray(t1.reward),
+                                      np.asarray(t2.reward))
+
+    def test_scan_matches_per_slot_public_api(self, key):
+        """The fused episode reproduces the legacy per-slot dispatch
+        (sample_slot -> _decide -> step) under the driver's key schedule."""
+        env = make_env()
+        agent = make_agent("grle", env, key)
+        drv = RolloutDriver(agent, n_fleets=1, train=False)
+        run_key = jax.random.PRNGKey(11)
+        _, trace = drv.run(run_key, 12, mode="scan")
+
+        carry = drv.init_carry(run_key)
+        task_keys, dec_keys = carry.task_keys, carry.dec_keys
+        state = env.reset()
+        for k in range(12):
+            task_keys, tsub = VecMECEnv.split_keys(task_keys)
+            dec_keys, dsub = VecMECEnv.split_keys(dec_keys)
+            tasks = env.sample_slot(tsub[0])
+            dec, q_best, _ = agent._decide_fn(agent.params, state, tasks,
+                                              dsub[0])
+            state, res = env.step(state, tasks, dec)
+            np.testing.assert_array_equal(np.asarray(trace.decisions[k, 0]),
+                                          np.asarray(dec))
+            np.testing.assert_allclose(float(trace.reward[k, 0]),
+                                       float(res.reward), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- workloads
+class TestWorkloads:
+    def test_iid_delegates_to_sample_slot(self, key):
+        env = make_env()
+        gen = make_workload(env)
+        wl = gen.init(key)
+        wl2, tasks = gen.sample(wl, key)
+        ref = env.sample_slot(key)
+        for a, b in zip(tasks, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert wl2 is wl
+
+    def test_poisson_mean_arrival_rate(self):
+        env = make_env(m=8, workload="poisson", arrival_rate=0.6)
+        _, tasks = run_workload(env, 300)
+        rate = np.mean([np.asarray(t.active) for t in tasks])
+        assert abs(rate - 0.6) < 0.06
+
+    def test_mmpp_mean_arrival_rate(self):
+        """Stationary arrival rate = pi_calm*r_lo + pi_burst*r_hi."""
+        env = make_env(m=8, workload="mmpp", mmpp_rates=(0.2, 0.8),
+                       mmpp_switch=(0.25, 0.25))   # pi = (1/2, 1/2)
+        _, tasks = run_workload(env, 500)
+        rate = np.mean([np.asarray(t.active) for t in tasks])
+        assert abs(rate - 0.5) < 0.08
+
+    def test_mmpp_arrivals_are_bursty(self):
+        """Slot-level arrival counts are positively autocorrelated — the
+        shared calm/burst mode couples consecutive slots (iid draws don't)."""
+        env = make_env(m=10, workload="mmpp", mmpp_rates=(0.05, 0.95),
+                       mmpp_switch=(0.1, 0.1))
+        _, tasks = run_workload(env, 400)
+        counts = np.array([np.asarray(t.active).sum() for t in tasks])
+        c = np.corrcoef(counts[:-1], counts[1:])[0, 1]
+        assert c > 0.2, c
+
+    def test_ar1_autocorrelation_sign(self):
+        env = make_env(workload="poisson", arrival_rate=1.0, ar1_rho=0.9)
+        states, _ = run_workload(env, 300)
+        series = np.array([float(s.rate_true[0, 0]) for s in states])
+        c = np.corrcoef(series[:-1], series[1:])[0, 1]
+        assert c > 0.5, c
+        # rho=0 keeps the draws fresh each slot
+        env0 = make_env(workload="poisson", arrival_rate=1.0, ar1_rho=0.0)
+        states0, _ = run_workload(env0, 300)
+        series0 = np.array([float(s.rate_true[0, 0]) for s in states0])
+        c0 = np.corrcoef(series0[:-1], series0[1:])[0, 1]
+        assert abs(c0) < 0.3, c0
+
+    def test_ar1_stays_in_range(self):
+        env = make_env(workload="poisson", ar1_rho=0.95,
+                       capacity_range=(0.25, 1.0))
+        states, tasks = run_workload(env, 100)
+        r_lo, r_hi = env.cfg.rate_mbps
+        for s in states:
+            assert np.all(np.asarray(s.rate_true) >= r_lo * 1e6 - 1e-3)
+            assert np.all(np.asarray(s.rate_true) <= r_hi * 1e6 + 1e-3)
+            assert np.all((np.asarray(s.capacity) >= 0.25)
+                          & (np.asarray(s.capacity) <= 1.0))
+
+    def test_churn_toggles_membership(self):
+        env = make_env(m=6, workload="poisson", arrival_rate=1.0,
+                       churn_prob=0.15)
+        states, _ = run_workload(env, 120)
+        member = np.stack([np.asarray(s.member) for s in states])
+        # membership changed at least once and is not globally dead
+        assert (member.min(axis=0) < 0.5).any()
+        assert member.mean() > 0.2
+
+    def test_driver_runs_dynamic_scenario(self, key):
+        from repro.mec import make_scenario
+        cfg = make_scenario("dyn_bursty", n_devices=4)
+        env = MECEnv(cfg)
+        agent = make_agent("grle", env, key, buffer_size=32, batch_size=8,
+                           train_every=5)
+        drv = RolloutDriver(agent, n_fleets=2)
+        carry, trace = drv.run(key, 30, mode="scan")
+        m = trace_metrics(trace, slot_s=cfg.slot_s)
+        active = np.asarray(trace.active)
+        assert 0.0 < active.mean() < 1.0          # arrivals actually vary
+        assert 0.0 <= m["ssp"] <= 1.0
+        # inactive devices never count as successes
+        assert not (np.asarray(trace.success) & (active < 0.5)).any()
+
+
+# ------------------------------------------------------------------- vecenv
+class TestVecEnv:
+    def test_fleet_keys_independent_of_batch(self, key):
+        env = make_env()
+        k1 = VecMECEnv(env, 1).fleet_keys(key)
+        k3 = VecMECEnv(env, 3).fleet_keys(key)
+        np.testing.assert_array_equal(np.asarray(k1[0]), np.asarray(k3[0]))
+
+    def test_vec_step_matches_single(self, key):
+        env = make_env(m=5)
+        vec = VecMECEnv(env, 3)
+        keys = vec.fleet_keys(key)
+        tasks = vec.sample_slot(keys)
+        rng = np.random.default_rng(0)
+        dec = jnp.asarray(rng.integers(0, env.N * env.L, (3, env.M)),
+                          jnp.int32)
+        states, results = vec.step(vec.reset(), tasks, dec)
+        for b in range(3):
+            t_b = jax.tree_util.tree_map(lambda x: x[b], tasks)
+            ref_state, ref_res = env.step(env.reset(), t_b, dec[b])
+            np.testing.assert_allclose(np.asarray(results.reward[b]),
+                                       np.asarray(ref_res.reward), rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(states.es_free[b]),
+                                       np.asarray(ref_state.es_free),
+                                       rtol=1e-6)
+
+    def test_batch_independence_in_driver(self, key):
+        """Fleet 0's entire trajectory is unchanged by adding fleets."""
+        env = make_env()
+        agent = make_agent("grle", env, key)
+        run_key = jax.random.PRNGKey(5)
+        d1 = RolloutDriver(agent, n_fleets=1, train=False)
+        d4 = RolloutDriver(agent, n_fleets=4, train=False)
+        _, t1 = d1.run(run_key, 15, mode="scan")
+        _, t4 = d4.run(run_key, 15, mode="scan")
+        np.testing.assert_array_equal(np.asarray(t1.decisions[:, 0]),
+                                      np.asarray(t4.decisions[:, 0]))
+        np.testing.assert_array_equal(np.asarray(t1.reward[:, 0]),
+                                      np.asarray(t4.reward[:, 0]))
+
+
+# ------------------------------------------------------------ device replay
+class TestDeviceReplay:
+    def _graph(self, env, key):
+        tasks = env.sample_slot(key)
+        return build_graph(env.observe(env.reset(), tasks), env.N, env.L)
+
+    def test_ring_overwrites_oldest(self, key):
+        env = make_env()
+        g = self._graph(env, key)
+        rep = replay_init(4, g, env.M)
+        batch = jax.tree_util.tree_map(lambda x: x[None], g)
+        for i in range(7):
+            rep = replay_add(rep, batch,
+                             jnp.full((1, env.M), i, jnp.int32))
+        assert int(rep.size) == 4
+        _, dec = replay_sample(rep, key, 4)
+        assert set(np.unique(np.asarray(dec))).issubset({3, 4, 5, 6})
+
+    def test_sample_without_replacement(self, key):
+        env = make_env()
+        g = self._graph(env, key)
+        rep = replay_init(16, g, env.M)
+        batch = jax.tree_util.tree_map(lambda x: x[None], g)
+        for i in range(10):
+            rep = replay_add(rep, batch,
+                             jnp.full((1, env.M), i, jnp.int32))
+        _, dec = replay_sample(rep, key, 8)
+        labels = np.asarray(dec)[:, 0]
+        assert len(set(labels.tolist())) == 8      # no duplicates
+
+    def test_batched_add(self, key):
+        env = make_env()
+        g = self._graph(env, key)
+        rep = replay_init(8, g, env.M)
+        graphs = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x, x, x]), g)
+        dec = jnp.arange(3)[:, None] * jnp.ones((1, env.M), jnp.int32)
+        rep = replay_add(rep, graphs, dec)
+        assert int(rep.size) == 3 and int(rep.ptr) == 3
+        np.testing.assert_array_equal(np.asarray(rep.decisions[:3, 0]),
+                                      [0, 1, 2])
+
+
+# -------------------------------------------------------------- host replay
+def test_host_replay_sample_without_replacement(key):
+    env = make_env()
+    tasks = env.sample_slot(key)
+    g = build_graph(env.observe(env.reset(), tasks), env.N, env.L)
+    buf = ReplayBuffer(capacity=32)
+    for i in range(20):
+        buf.add(g, np.full((env.M,), i))
+    _, dec = buf.sample(16)
+    labels = dec[:, 0]
+    assert len(labels) == 16
+    assert len(np.unique(labels)) == 16            # satellite: no duplicates
