@@ -13,6 +13,7 @@
 | kernels             | kernel microbench (us_per_call)    |
 | roofline            | deliverable (g), from the dry-run  |
 | rollout_throughput  | scan-fused vs per-slot loop        |
+| sweep_throughput    | packed sweep vs per-cell loop      |
 """
 from __future__ import annotations
 
@@ -77,7 +78,7 @@ def bench_kernels(quick: bool = False):
 
 BENCHES = ("exit_profile", "convergence", "vary_devices", "vary_capacity",
            "vary_inference_time", "imperfect_csi", "kernels", "roofline",
-           "rollout_throughput")
+           "rollout_throughput", "sweep_throughput")
 
 
 def main() -> None:
@@ -110,6 +111,9 @@ def main() -> None:
         for r in rows or []:
             if "us_per_call" in r:
                 print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+            elif "cells_per_s" in r:
+                print(f"{r['name']},,cells_per_s={r['cells_per_s']};"
+                      f"{r['derived']}")
             elif "avg_accuracy" in r:
                 label = (f"{name}/{r['method']}-M{r['n_devices']}"
                          f"-t{int(r['slot_ms'])}")

@@ -1,0 +1,79 @@
+"""Reproduce the paper's comparison figures with one sweep call.
+
+Runs the Fig 5-8 scenario columns (plus one beyond-paper dynamic
+workload) for all four methods over several seeds, packed and sharded,
+then prints the per-scenario comparison tables with GRLE-vs-baseline
+ratios — the programmatic version of
+
+    PYTHONPATH=src python -m repro.launch sweep \
+        --scenarios fig5_baseline,fig6_capacity,fig7_jitter,fig8_csi,dyn_bursty \
+        --methods grle,grl,drooe,droo --seeds 3
+
+Defaults here are scaled down (--slots 150, M=8) so the script finishes
+in minutes on a laptop CPU; pass --paper-scale for the §VI-A shape
+(M=14, 1000 slots).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.mec import PAPER_FIGURES, expand_grid
+from repro.sharding.fleet import fleet_mesh
+from repro.sweep import (SweepSpec, SweepStore, build_report,
+                         format_markdown, run_sweep, write_report)
+
+
+def device_grid(args, mesh) -> None:
+    """Fig 5's x-axis: the same comparison at several fleet sizes M."""
+    counts = tuple(int(m) for m in args.device_grid.split(","))
+    store = SweepStore(args.store)
+    combined = {}
+    for name, ov in expand_grid(("fig5_baseline",), n_devices=counts):
+        spec = SweepSpec(
+            scenarios=(name,), methods=("grle", "grl", "drooe", "droo"),
+            seeds=tuple(range(args.seeds)), n_devices=ov["n_devices"],
+            n_slots=args.slots, replay_capacity=64, batch_size=16,
+            train_every=10)
+        rows = run_sweep(spec, store=store, mesh=mesh)
+        report = build_report(rows)
+        combined[f"M={ov['n_devices']}"] = report
+        print(f"## M = {ov['n_devices']}")
+        print(format_markdown(report))
+    write_report(combined, args.report)
+    print(f"report -> {args.report}   (one entry per device count)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=150)
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--device-grid", default="",
+                    help="comma-separated device counts: run fig5 per M "
+                         "instead of the figure columns (e.g. 6,10,14)")
+    ap.add_argument("--store", default="results/sweep_figures")
+    ap.add_argument("--report", default="results/sweep_figures_report.json")
+    args = ap.parse_args()
+
+    mesh = fleet_mesh()
+    if args.device_grid:
+        device_grid(args, mesh)
+        return
+
+    n_devices, n_slots = (14, 1000) if args.paper_scale else (8, args.slots)
+    spec = SweepSpec(
+        scenarios=PAPER_FIGURES + ("dyn_bursty",),
+        methods=("grle", "grl", "drooe", "droo"),
+        seeds=tuple(range(args.seeds)),
+        n_devices=n_devices, n_slots=n_slots,
+        replay_capacity=64, batch_size=16, train_every=10)
+
+    rows = run_sweep(spec, store=SweepStore(args.store), mesh=mesh)
+    report = build_report(rows)
+    write_report(report, args.report)
+    print(format_markdown(report))
+    print(f"report -> {args.report}   (re-running resumes from {args.store})")
+
+
+if __name__ == "__main__":
+    main()

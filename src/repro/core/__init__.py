@@ -6,10 +6,18 @@ from repro.core.quantize import (
     max_candidates,
 )
 from repro.core.replay import ReplayBuffer
-from repro.core.agent import OffloadingAgent, make_agent
+from repro.core.agent import (
+    METHOD_SPECS,
+    OffloadingAgent,
+    actor_family,
+    init_params,
+    make_agent,
+    make_exit_mask,
+)
 
 __all__ = [
     "MECGraph", "build_graph", "pad_graph",
     "one_hot_candidates", "binary_order_preserving", "max_candidates",
     "ReplayBuffer", "OffloadingAgent", "make_agent",
+    "METHOD_SPECS", "actor_family", "init_params", "make_exit_mask",
 ]

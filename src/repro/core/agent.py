@@ -68,6 +68,45 @@ class MLPActor:
         return jax.nn.sigmoid(logits), logits
 
 
+# ----------------------------------------------------------------- pure init
+# Method name -> (actor family, early-exit flag). The four rows of §VI-C.
+METHOD_SPECS = {
+    "grle": dict(actor="gcn", early_exit=True),
+    "grl": dict(actor="gcn", early_exit=False),
+    "drooe": dict(actor="mlp", early_exit=True),
+    "droo": dict(actor="mlp", early_exit=False),
+}
+
+
+def actor_family(method: str) -> str:
+    """'gcn' or 'mlp' — methods in one family share a param pytree."""
+    return METHOD_SPECS[method.lower()]["actor"]
+
+
+def init_params(actor: str, env: MECEnv, key: jax.Array,
+                hidden=(128, 64)) -> dict:
+    """Fresh actor params as a pure function of (key, env dims).
+
+    Safe under ``vmap`` over keys, which is how the sweep packer builds
+    per-cell params without constructing a stateful ``OffloadingAgent``.
+    """
+    if actor == "gcn":
+        return gcn.init(key, 7, 4, hidden=hidden)  # 6 obs feats + device-id
+    if actor == "mlp":
+        return MLPActor.init(key, env.M, env.N, env.N * env.L)
+    raise ValueError(f"unknown actor {actor!r}")
+
+
+def make_exit_mask(n_servers: int, n_exits: int,
+                   early_exit: bool) -> jax.Array:
+    """[N*L] option mask; without early-exit only final exits are allowed."""
+    mask = np.ones((n_servers * n_exits,), np.float32)
+    if not early_exit:
+        mask[:] = 0.0
+        mask[n_exits - 1::n_exits] = 1.0
+    return jnp.asarray(mask)
+
+
 # ---------------------------------------------------------------------- agent
 class OffloadingAgent:
     def __init__(self, env: MECEnv, key: jax.Array, *, actor: str = "gcn",
@@ -87,13 +126,7 @@ class OffloadingAgent:
         s_max = max_candidates(M, N * L)
         self.n_candidates = min(n_candidates or M * N * L, s_max)
 
-        if actor == "gcn":
-            dev_dim, opt_dim = 7, 4   # 6 obs features + device-id
-            self.params = gcn.init(key, dev_dim, opt_dim, hidden=hidden)
-        elif actor == "mlp":
-            self.params = MLPActor.init(key, M, N, N * L)
-        else:
-            raise ValueError(f"unknown actor {actor!r}")
+        self.params = init_params(actor, env, key, hidden=hidden)
 
         self.opt = adam(lr)
         self.opt_state = self.opt.init(self.params)
@@ -101,13 +134,7 @@ class OffloadingAgent:
         self.loss_history: list[float] = []
         self._steps = 0
 
-        # exit mask: without early-exit only the final exit is allowed
-        mask = np.zeros((N * L,), np.float32)
-        mask[:] = 1.0
-        if not early_exit:
-            mask[:] = 0.0
-            mask[L - 1::L] = 1.0
-        self._exit_mask = jnp.asarray(mask)
+        self._exit_mask = make_exit_mask(N, L, early_exit)
 
         self._score_fn = jax.jit(self._scores)
         self._train_fn = jax.jit(self._train_step)
@@ -119,28 +146,35 @@ class OffloadingAgent:
         self.n_random = 16
 
     # ------------------------------------------------------------- actor pass
-    def _scores(self, params, g: MECGraph):
+    def _scores(self, params, g: MECGraph, exit_mask=None):
+        """``exit_mask=None`` uses the agent's own mask; the sweep packer
+        passes a per-cell mask instead (vmapped over cells)."""
+        if exit_mask is None:
+            exit_mask = self._exit_mask
         if self.actor_type == "gcn":
             x_hat, logits = gcn.apply(params, g)
         else:
             x_hat, logits = MLPActor.apply(params, g, self.n_exits)
         # disallowed (masked-exit or disconnected) options get -inf scores so
         # the order-preserving quantizer can never flip a device onto them
-        allowed = (self._exit_mask[None, :] > 0.5) & (g.mask > 0.5)
+        allowed = (exit_mask[None, :] > 0.5) & (g.mask > 0.5)
         x_hat = jnp.where(allowed, x_hat, -1e9)
         logits = jnp.where(allowed, logits, -1e9)
         return x_hat, logits
 
     # --------------------------------------------------------------- decision
-    def _decide(self, params, state: MECState, tasks: SlotTasks, key):
+    def _decide(self, params, state: MECState, tasks: SlotTasks, key,
+                exit_mask=None):
         """Fused actor+critic pass (one device dispatch per slot)."""
+        if exit_mask is None:
+            exit_mask = self._exit_mask
         obs = self.env.observe(state, tasks)
         g = build_graph(obs, self.env.N, self.env.L)
-        x_hat, _ = self._scores(params, g)
+        x_hat, _ = self._scores(params, g, exit_mask)
         cands = one_hot_candidates(x_hat, self.n_candidates)
         if self.n_random:
             # exploration candidates drawn uniformly over *allowed* options
-            allowed = (self._exit_mask[None, :] > 0.5) & (g.mask > 0.5)
+            allowed = (exit_mask[None, :] > 0.5) & (g.mask > 0.5)
             gumbel = jax.random.gumbel(
                 key, (self.n_random, *allowed.shape))
             rand = jnp.argmax(jnp.where(allowed[None], gumbel, -jnp.inf),
@@ -163,14 +197,16 @@ class OffloadingAgent:
         return decision, info
 
     # ---------------------------------------------------------------- training
-    def _loss(self, params, graphs: MECGraph, decisions):
+    def _loss(self, params, graphs: MECGraph, decisions, exit_mask=None):
         """Averaged masked BCE over edges (Eq 16)."""
+        if exit_mask is None:
+            exit_mask = self._exit_mask
 
         def one(g, dec):
-            _, logits = self._scores(params, g)
+            _, logits = self._scores(params, g, exit_mask)
             m, o = logits.shape
             target = jax.nn.one_hot(dec, o)                       # [M, O]
-            valid = g.mask * self._exit_mask[None, :]
+            valid = g.mask * exit_mask[None, :]
             # numerically-stable BCE from logits
             per_edge = jnp.maximum(logits, 0) - logits * target \
                 + jnp.log1p(jnp.exp(-jnp.abs(logits)))
@@ -178,8 +214,10 @@ class OffloadingAgent:
 
         return jnp.mean(jax.vmap(one)(graphs, decisions))
 
-    def _train_step(self, params, opt_state, graphs, decisions):
-        loss, grads = jax.value_and_grad(self._loss)(params, graphs, decisions)
+    def _train_step(self, params, opt_state, graphs, decisions,
+                    exit_mask=None):
+        loss, grads = jax.value_and_grad(self._loss)(params, graphs, decisions,
+                                                     exit_mask)
         updates, opt_state = self.opt.update(grads, opt_state, params)
         return apply_updates(params, updates), opt_state, loss
 
@@ -195,12 +233,6 @@ class OffloadingAgent:
 
 def make_agent(method: str, env: MECEnv, key: jax.Array, **kw) -> OffloadingAgent:
     """Factory for the paper's four methods by name."""
-    table = {
-        "grle": dict(actor="gcn", early_exit=True),
-        "grl": dict(actor="gcn", early_exit=False),
-        "drooe": dict(actor="mlp", early_exit=True),
-        "droo": dict(actor="mlp", early_exit=False),
-    }
-    spec = dict(table[method.lower()])
+    spec = dict(METHOD_SPECS[method.lower()])
     spec.update(kw)
     return OffloadingAgent(env, key, **spec)

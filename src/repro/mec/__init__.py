@@ -8,11 +8,18 @@ from repro.mec.profiles import (
 )
 from repro.mec.env import MECEnv, MECState, SlotTasks, SlotResult
 from repro.mec.metrics import RunningMetrics
-from repro.mec.scenarios import make_scenario, SCENARIOS
+from repro.mec.scenarios import (
+    DYNAMIC_SCENARIOS,
+    PAPER_FIGURES,
+    SCENARIOS,
+    expand_grid,
+    make_scenario,
+)
 
 __all__ = [
     "MECConfig", "MECEnv", "MECState", "SlotTasks", "SlotResult",
     "VGG16_TABLE_I", "CANDIDATE_EXITS", "exit_profile_gpu",
     "exit_profile_tpu_v5e", "llm_exit_profile",
     "RunningMetrics", "make_scenario", "SCENARIOS",
+    "PAPER_FIGURES", "DYNAMIC_SCENARIOS", "expand_grid",
 ]

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 from repro.mec.config import MECConfig
 
@@ -40,6 +41,11 @@ SCENARIOS = {
 }
 
 
+# Scenario families, in paper order — handy for sweep specs.
+PAPER_FIGURES = ("fig5_baseline", "fig6_capacity", "fig7_jitter", "fig8_csi")
+DYNAMIC_SCENARIOS = tuple(n for n in SCENARIOS if n.startswith("dyn_"))
+
+
 def scenario_grid(names=None, device_counts=(6, 8, 10, 12, 14),
                   slot_lengths_ms=(10.0, 30.0)):
     """The benchmark sweep used by Figs 5-8."""
@@ -48,3 +54,23 @@ def scenario_grid(names=None, device_counts=(6, 8, 10, 12, 14),
         for m in device_counts:
             for tau in slot_lengths_ms:
                 yield name, m, tau
+
+
+def expand_grid(names=None, **axes):
+    """Cartesian expansion of scenario names with config-override axes.
+
+    Each keyword is an MECConfig field mapped to an iterable of values;
+    every (name, override-combination) pair is yielded as
+    ``(name, overrides_dict)`` in deterministic order. Sweep callers turn
+    each pair into one ``SweepSpec`` — e.g. the Fig-5 device-count axis
+    in ``examples/sweep_paper_figures.py --device-grid``:
+
+        expand_grid(PAPER_FIGURES, n_devices=(6, 14))
+          -> ("fig5_baseline", {"n_devices": 6}), ...
+    """
+    names = list(names) if names is not None else list(SCENARIOS)
+    keys = sorted(axes)
+    value_lists = [list(axes[k]) for k in keys]
+    for name in names:
+        for combo in itertools.product(*value_lists):
+            yield name, dict(zip(keys, combo))

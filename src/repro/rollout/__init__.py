@@ -5,6 +5,8 @@ Three layers (see driver.py docstring):
   replay    — device-resident functional ring buffer
   driver    — lax.scan-fused train/eval episodes
   workloads — stochastic arrival/channel generators (dyn_* scenarios)
+  metrics   — device-resident running summary (per-cell, no per-slot
+              host transfer; consumed by the sweep subsystem)
 """
 from repro.rollout.vecenv import VecMECEnv
 from repro.rollout.replay import (
@@ -14,10 +16,17 @@ from repro.rollout.replay import (
     replay_sample,
 )
 from repro.rollout.workloads import WorkloadGen, WorkloadState, make_workload
+from repro.rollout.metrics import (
+    CellMetrics,
+    metrics_finalize,
+    metrics_init,
+    metrics_update,
+)
 from repro.rollout.driver import (
     RolloutCarry,
     RolloutDriver,
     RolloutTrace,
+    carry_metrics,
     trace_metrics,
 )
 
@@ -25,5 +34,7 @@ __all__ = [
     "VecMECEnv",
     "DeviceReplay", "replay_init", "replay_add", "replay_sample",
     "WorkloadGen", "WorkloadState", "make_workload",
-    "RolloutCarry", "RolloutDriver", "RolloutTrace", "trace_metrics",
+    "CellMetrics", "metrics_init", "metrics_update", "metrics_finalize",
+    "RolloutCarry", "RolloutDriver", "RolloutTrace", "carry_metrics",
+    "trace_metrics",
 ]

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.agent import OffloadingAgent
 from repro.core.graph import build_graph
+from repro.rollout.metrics import (CellMetrics, metrics_init, metrics_update)
 from repro.rollout.replay import (DeviceReplay, replay_add, replay_init,
                                   replay_sample)
 from repro.rollout.vecenv import VecMECEnv
@@ -49,6 +50,7 @@ class RolloutCarry(NamedTuple):
     opt_state: NamedTuple
     replay: DeviceReplay
     step: jax.Array            # scalar int32, slots completed
+    metrics: CellMetrics       # running all-fleets-pooled summary
 
 
 class RolloutTrace(NamedTuple):
@@ -97,8 +99,14 @@ class RolloutDriver:
         self._scan_cache: dict = {}
 
     # ------------------------------------------------------------------ carry
-    def init_carry(self, key: jax.Array) -> RolloutCarry:
-        """Fresh episode state; fleet streams are fold_in(key_i, fleet)."""
+    def init_carry(self, key: jax.Array, *, params=None,
+                   opt_state=None) -> RolloutCarry:
+        """Fresh episode state; fleet streams are fold_in(key_i, fleet).
+
+        ``params``/``opt_state`` default to the interactive agent's but can
+        be supplied explicitly — the sweep packer vmaps this over per-cell
+        (key, params, opt_state) triples (every op here is vmappable).
+        """
         k_task, k_dec, k_train, k_wl = jax.random.split(key, 4)
         wl_state = jax.vmap(self.workload.init)(self.vec.fleet_keys(k_wl))
         return RolloutCarry(
@@ -107,15 +115,18 @@ class RolloutDriver:
             task_keys=self.vec.fleet_keys(k_task),
             dec_keys=self.vec.fleet_keys(k_dec),
             train_key=k_train,
-            params=self.agent.params,
-            opt_state=self.agent.opt_state,
+            params=self.agent.params if params is None else params,
+            opt_state=self.agent.opt_state if opt_state is None else opt_state,
             replay=replay_init(self.replay_capacity, self._graph_spec,
                                self.env.M),
             step=jnp.zeros((), jnp.int32),
+            metrics=metrics_init(),
         )
 
     # ------------------------------------------------------------- slot body
-    def _slot(self, carry: RolloutCarry):
+    def _slot(self, carry: RolloutCarry, exit_mask=None):
+        """One slot for all fleets. ``exit_mask=None`` uses the agent's own
+        mask; the sweep packer passes a per-cell mask (vmapped)."""
         task_keys, task_subs = VecMECEnv.split_keys(carry.task_keys)
         dec_keys, dec_subs = VecMECEnv.split_keys(carry.dec_keys)
         params, opt_state = carry.params, carry.opt_state
@@ -123,7 +134,7 @@ class RolloutDriver:
         def fleet(env_state, wl_state, tk, dk):
             wl_state, tasks = self.workload.sample(wl_state, tk)
             decision, q_best, g = self.agent._decide(
-                params, env_state, tasks, dk)
+                params, env_state, tasks, dk, exit_mask)
             new_state, result = self.env.step(env_state, tasks, decision)
             return wl_state, new_state, g, decision, result, q_best, \
                 tasks.active
@@ -144,7 +155,7 @@ class RolloutDriver:
             def do_train(op):
                 p, o, k = op
                 g, d = replay_sample(replay, k, self.batch_size)
-                return self.agent._train_step(p, o, g, d)
+                return self.agent._train_step(p, o, g, d, exit_mask)
 
             def skip(op):
                 p, o, _ = op
@@ -153,10 +164,23 @@ class RolloutDriver:
             params, opt_state, loss = jax.lax.cond(
                 due, do_train, skip, (params, opt_state, tk))
 
+        # dtype-normalized outputs: identical between scan and loop modes
+        decisions = decisions.astype(jnp.int32)
+        reward = results.reward.astype(jnp.float32)
+        success = results.success.astype(jnp.bool_)
+        accuracy = results.accuracy.astype(jnp.float32)
+        active = active.astype(jnp.float32)
+        q_best = q_best.astype(jnp.float32)
+        loss = loss.astype(jnp.float32)
+
+        metrics = metrics_update(carry.metrics, reward=reward,
+                                 success=success, accuracy=accuracy,
+                                 active=active, loss=loss)
         new_carry = RolloutCarry(env_state, wl_state, task_keys, dec_keys,
-                                 train_key, params, opt_state, replay, step)
-        out = RolloutTrace(decisions, results.reward, results.success,
-                           results.accuracy, active, q_best, loss)
+                                 train_key, params, opt_state, replay, step,
+                                 metrics)
+        out = RolloutTrace(decisions, reward, success, accuracy, active,
+                           q_best, loss)
         return new_carry, out
 
     # -------------------------------------------------------------- episodes
@@ -178,6 +202,36 @@ class RolloutDriver:
             return carry, trace
         raise ValueError(f"unknown mode {mode!r}")
 
+    def run_sharded(self, key: jax.Array, n_slots: int, *, mesh=None):
+        """Scan-fused episode with the fleet axis sharded across devices.
+
+        Fleet-batched carry leaves (env/workload state, per-fleet RNG
+        streams) are split over the mesh's ``fleet`` axis; params, opt
+        state and the shared replay ring are replicated (the B-fleets ->
+        one-learner fan-in becomes a cross-device reduction XLA inserts at
+        the ``replay_add`` gather). ``mesh=None`` — e.g. from
+        ``fleet_mesh()`` on a 1-device host — falls back to the plain
+        ``run(..., mode="scan")`` path, so both paths compile the same
+        episode body.
+        """
+        from repro.sharding.fleet import replicate, shard_leading_axis
+        if mesh is None:
+            return self.run(key, n_slots, mode="scan")
+        if self.n_fleets % mesh.devices.size != 0:
+            raise ValueError(
+                f"n_fleets={self.n_fleets} not divisible by "
+                f"{mesh.devices.size} devices")
+        carry = self.init_carry(key)
+        batched = dict(env_state=carry.env_state, wl_state=carry.wl_state,
+                       task_keys=carry.task_keys, dec_keys=carry.dec_keys)
+        batched = shard_leading_axis(batched, mesh)
+        rest = replicate(
+            dict(train_key=carry.train_key, params=carry.params,
+                 opt_state=carry.opt_state, replay=carry.replay,
+                 step=carry.step, metrics=carry.metrics), mesh)
+        carry = RolloutCarry(**batched, **rest)
+        return self._run_scan(carry, n_slots)
+
     def _run_scan(self, carry: RolloutCarry, n_slots: int):
         fn = self._scan_cache.get(n_slots)
         if fn is None:
@@ -192,6 +246,24 @@ class RolloutDriver:
         """Write learned params/optimizer back into the interactive agent."""
         self.agent.params = carry.params
         self.agent.opt_state = carry.opt_state
+
+
+def carry_metrics(carry: RolloutCarry, *, slot_s: float,
+                  n_fleets: int) -> dict:
+    """Host-side view of the carry's running accumulator (floats/None).
+
+    Streaming counterpart of ``trace_metrics`` — agrees with it on shared
+    keys up to float32 summation order (tested), while transferring eight
+    scalars instead of the full trace.
+    """
+    from repro.rollout.metrics import metrics_finalize
+    out = {k: float(v) for k, v in metrics_finalize(
+        carry.metrics, slot_s=slot_s, n_fleets=n_fleets).items()}
+    out["tasks"] = int(out["tasks"])
+    out["train_steps"] = int(out["train_steps"])
+    if not np.isfinite(out["final_loss"]):
+        out["final_loss"] = None
+    return out
 
 
 def trace_metrics(trace: RolloutTrace, *, slot_s: float) -> dict:

@@ -1,0 +1,77 @@
+"""Device-resident running metrics for scan-fused rollouts.
+
+``trace_metrics`` needs the full [T, B, ...] trace on the host — fine for
+one episode, prohibitive for a packed sweep where C cells x B fleets x T
+slots of trace would dominate memory and host-transfer time. ``CellMetrics``
+is the streaming counterpart: a NamedTuple of fixed-dtype scalars carried
+through the scan and updated every slot, so a sweep transfers O(C) floats
+instead of O(C*B*T*M) arrays. One accumulator pools all fleets of one cell
+(matching ``trace_metrics``' all-fleets pooling).
+
+All fields are explicitly float32/int32 so ``mode="scan"`` and
+``mode="loop"`` produce dtype-identical results (tested).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CellMetrics(NamedTuple):
+    """Running sums for one cell (all fleets pooled)."""
+    n_slots: jax.Array    # int32, slots accumulated
+    n_tasks: jax.Array    # float32, active tasks seen
+    n_success: jax.Array  # float32, tasks finished within deadline
+    n_miss: jax.Array     # float32, active tasks that missed the deadline
+    sum_acc: jax.Array    # float32, sum of accuracy over successful tasks
+    sum_reward: jax.Array # float32, sum of per-fleet slot rewards
+    n_train: jax.Array    # int32, train steps taken
+    last_loss: jax.Array  # float32, most recent minibatch loss (NaN before)
+
+
+def metrics_init() -> CellMetrics:
+    f = lambda: jnp.zeros((), jnp.float32)
+    i = lambda: jnp.zeros((), jnp.int32)
+    return CellMetrics(n_slots=i(), n_tasks=f(), n_success=f(), n_miss=f(),
+                       sum_acc=f(), sum_reward=f(), n_train=i(),
+                       last_loss=jnp.full((), jnp.nan, jnp.float32))
+
+
+def metrics_update(m: CellMetrics, *, reward: jax.Array, success: jax.Array,
+                   accuracy: jax.Array, active: jax.Array,
+                   loss: jax.Array) -> CellMetrics:
+    """Fold one slot's batched results ([B] reward, [B, M] the rest)."""
+    act = active > 0.5
+    suc = success & act
+    sucf = suc.astype(jnp.float32)
+    trained = ~jnp.isnan(loss)
+    return CellMetrics(
+        n_slots=m.n_slots + jnp.ones((), jnp.int32),
+        n_tasks=m.n_tasks + act.astype(jnp.float32).sum(),
+        n_success=m.n_success + sucf.sum(),
+        n_miss=m.n_miss + (act & ~suc).astype(jnp.float32).sum(),
+        sum_acc=m.sum_acc + (accuracy.astype(jnp.float32) * sucf).sum(),
+        sum_reward=m.sum_reward + reward.astype(jnp.float32).sum(),
+        n_train=m.n_train + trained.astype(jnp.int32),
+        last_loss=jnp.where(trained, loss.astype(jnp.float32), m.last_loss),
+    )
+
+
+def metrics_finalize(m: CellMetrics, *, slot_s: float,
+                     n_fleets: int) -> dict:
+    """§VI-D summary metrics (float32 arrays; vmappable over cells)."""
+    tasks = jnp.maximum(m.n_tasks, 1.0)
+    wall = jnp.maximum(m.n_slots.astype(jnp.float32) * slot_s, 1e-9)
+    return {
+        "ssp": m.n_success / tasks,
+        "avg_accuracy": m.sum_acc / tasks,
+        "deadline_miss": m.n_miss / tasks,
+        "throughput_tps": m.n_success / wall / n_fleets,
+        "avg_reward": m.sum_reward
+        / jnp.maximum(m.n_slots.astype(jnp.float32) * n_fleets, 1.0),
+        "tasks": m.n_tasks,
+        "train_steps": m.n_train.astype(jnp.float32),
+        "final_loss": m.last_loss,
+    }

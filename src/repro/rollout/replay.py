@@ -76,17 +76,24 @@ def replay_add(replay: DeviceReplay, graphs: MECGraph,
 
 
 def replay_sample(replay: DeviceReplay, key: jax.Array, batch_size: int):
-    """Uniform minibatch without replacement -> (MECGraph [B,...], [B, M]).
+    """Uniform minibatch -> (MECGraph [B,...], [B, M]); static shapes.
 
-    Callers should gate on ``replay.size >= batch_size`` (the scan driver
-    does, via ``lax.cond``); if violated, indices wrap onto the filled
-    region and duplicates appear — shapes stay static either way.
+    Without replacement whenever the buffer holds >= ``batch_size``
+    entries. With fewer, the batch is clamped onto the filled region:
+    the first ``size`` rows are a permutation of every stored entry and
+    the remainder are uniform re-draws from it — well-defined (and still
+    uniform in expectation) instead of the previous modulo wrap, which
+    over-represented low slots and silently relied on callers never
+    training early.
     """
     cap = replay.capacity
-    scores = jax.random.uniform(key, (cap,))
+    k_perm, k_fill = jax.random.split(key)
+    scores = jax.random.uniform(k_perm, (cap,))
     scores = jnp.where(jnp.arange(cap) < replay.size, scores, jnp.inf)
     take = jnp.argsort(scores)[:batch_size]
-    take = take % jnp.maximum(replay.size, 1)
+    fill = jax.random.randint(k_fill, (batch_size,), 0,
+                              jnp.maximum(replay.size, 1))
+    take = jnp.where(jnp.arange(batch_size) < replay.size, take, fill)
     graphs = MECGraph(
         device_feat=replay.device_feat[take],
         option_feat=replay.option_feat[take],

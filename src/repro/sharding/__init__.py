@@ -5,8 +5,17 @@ from repro.sharding.partition import (
     make_named_sharding,
     shard_tree_specs,
 )
+from repro.sharding.fleet import (
+    FLEET_AXIS,
+    fleet_mesh,
+    pad_to_devices,
+    replicate,
+    shard_leading_axis,
+)
 
 __all__ = [
     "param_pspecs", "batch_pspec", "cache_pspecs", "make_named_sharding",
     "shard_tree_specs",
+    "FLEET_AXIS", "fleet_mesh", "pad_to_devices", "replicate",
+    "shard_leading_axis",
 ]

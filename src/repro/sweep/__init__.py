@@ -1,0 +1,31 @@
+"""Sharded experiment sweeps: (scenario x method x seed) grids in one launch.
+
+The paper's headline numbers are comparative (Figs 5-8: GRLE vs GRL /
+DROOE / DROO across dynamic scenarios); this subsystem turns those
+comparisons into a single hardware-saturating command instead of
+hand-running one cell at a time. Five layers:
+
+  spec    — declarative grid (scenarios x methods x seeds + overrides)
+            expanded into hashed Cells
+  packer  — groups same-shape cells (one scenario, one actor family)
+            into mega-batches that vmap over the cell axis
+  runner  — executes packs through RolloutDriver's scan-fused slot body,
+            cell axis sharded across devices (single device -> plain vmap)
+  store   — resumable on-disk results keyed by cell hash; finished cells
+            are never recomputed or rewritten
+  report  — per-scenario aggregation over seeds + GRLE-vs-baseline
+            ratios in the style of the paper's Fig 5-8 / Table VI
+"""
+from repro.sweep.spec import Cell, SweepSpec, cell_keys
+from repro.sweep.packer import Pack, pack_cells
+from repro.sweep.runner import run_cell, run_pack, run_sweep
+from repro.sweep.store import SweepStore
+from repro.sweep.report import build_report, format_markdown, write_report
+
+__all__ = [
+    "Cell", "SweepSpec", "cell_keys",
+    "Pack", "pack_cells",
+    "run_cell", "run_pack", "run_sweep",
+    "SweepStore",
+    "build_report", "format_markdown", "write_report",
+]

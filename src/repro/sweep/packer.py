@@ -1,0 +1,55 @@
+"""Pack same-shape cells into vmappable mega-batches.
+
+Two cells can share one compiled episode iff their traced constants and
+pytree structures agree: the MEC network shape and scenario constants
+(baked into the env trace) and the actor param structure (gcn vs mlp).
+Everything else — seed streams, exit masks (GRLE vs GRL, DROOE vs DROO),
+params — is data, batched over a leading cell axis.
+
+So the pack key is (scenario, actor family, run shape): a standard
+4-method x S-seed sweep packs into 2 mega-batches of 2*S cells per
+scenario, each compiled once and executed in a single scan with the cell
+axis sharded across devices by the runner.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+from repro.core.agent import actor_family
+from repro.sweep.spec import Cell
+
+
+class Pack(NamedTuple):
+    """Cells that execute together in one vmapped episode."""
+    scenario: str
+    family: str              # "gcn" | "mlp"
+    cells: Tuple[Cell, ...]
+
+    def label(self) -> str:
+        return f"{self.scenario}/{self.family}[{len(self.cells)}]"
+
+
+def _shape_sig(cell: Cell):
+    """Everything that must match for cells to share a compiled episode."""
+    return (cell.scenario, actor_family(cell.method), cell.n_devices,
+            cell.slot_ms, cell.n_slots, cell.n_fleets, cell.replay_capacity,
+            cell.batch_size, cell.train_every, cell.overrides)
+
+
+def pack_cells(cells) -> list:
+    """Group cells by shape signature, preserving deterministic order.
+
+    Pack membership depends only on the full grid — never on which cells
+    already have stored results — so a resumed sweep re-packs identically
+    and recomputed cells see the exact same vmapped batch (bitwise-stable
+    resume).
+    """
+    groups: dict = {}
+    for cell in cells:
+        groups.setdefault(_shape_sig(cell), []).append(cell)
+    packs = []
+    for sig in sorted(groups, key=str):
+        members = sorted(groups[sig], key=lambda c: (c.method, c.seed))
+        packs.append(Pack(scenario=sig[0], family=sig[1],
+                          cells=tuple(members)))
+    return packs

@@ -1,0 +1,93 @@
+"""Aggregate sweep rows into the paper's comparison tables and curves.
+
+Per scenario (= figure column: fig5_baseline .. fig8_csi, dyn_*), the
+report carries mean/std over seeds for every §VI-D metric and method,
+plus the paper's headline framing — GRLE's metrics normalized against
+each baseline (the "up to 3.41x average accuracy over GRL, 1.45x over
+DROOE" ratios of Figs 5-8 / Table VI style).
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import numpy as np
+
+METRIC_KEYS = ("avg_accuracy", "ssp", "deadline_miss", "throughput_tps",
+               "avg_reward")
+RATIO_KEYS = ("avg_accuracy", "throughput_tps", "ssp")
+TARGET = "grle"
+BASELINES = ("grl", "drooe", "droo")
+
+
+def _mean_std(rows, key):
+    vals = np.asarray([r[key] for r in rows], np.float64)
+    return {"mean": round(float(vals.mean()), 6),
+            "std": round(float(vals.std()), 6),
+            "n": int(vals.size)}
+
+
+def build_report(rows) -> dict:
+    """Rows (one per cell) -> per-scenario aggregate + ratio report."""
+    scenarios: dict = {}
+    for row in rows:
+        sc = scenarios.setdefault(row["scenario"], {})
+        sc.setdefault(row["method"], []).append(row)
+
+    out = {"scenarios": {}, "grid": {
+        "scenarios": sorted(scenarios),
+        "methods": sorted({r["method"] for r in rows}),
+        "seeds": sorted({r["seed"] for r in rows}),
+        "cells": len(rows),
+    }}
+    for name in sorted(scenarios):
+        methods = {
+            m: {k: _mean_std(rs, k) for k in METRIC_KEYS}
+            for m, rs in sorted(scenarios[name].items())
+        }
+        ratios: dict = {}
+        if TARGET in methods:
+            for base in BASELINES:
+                if base not in methods:
+                    continue
+                ratios[f"{TARGET}_vs_{base}"] = {
+                    k: _ratio(methods[TARGET][k]["mean"],
+                              methods[base][k]["mean"])
+                    for k in RATIO_KEYS
+                }
+        out["scenarios"][name] = {"methods": methods, "ratios": ratios}
+    return out
+
+
+def _ratio(num: float, den: float) -> Optional[float]:
+    if den == 0:
+        return None
+    return round(num / den, 4)
+
+
+def format_markdown(report: dict) -> str:
+    """Report -> one markdown table per scenario + ratio summary lines."""
+    lines = []
+    for name, sc in report["scenarios"].items():
+        lines.append(f"### {name}")
+        lines.append("| method | avg_accuracy | ssp | deadline_miss "
+                     "| throughput_tps | avg_reward |")
+        lines.append("|---|---|---|---|---|---|")
+        for method, stats in sc["methods"].items():
+            cells = [f"{stats[k]['mean']:.4f} ± {stats[k]['std']:.4f}"
+                     for k in METRIC_KEYS]
+            lines.append("| " + " | ".join([method] + cells) + " |")
+        for pair, vals in sc["ratios"].items():
+            pretty = ", ".join(
+                f"{k}={v if v is not None else 'n/a'}x"
+                for k, v in vals.items())
+            lines.append(f"- **{pair}**: {pretty}")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def write_report(report: dict, path: str) -> str:
+    """Deterministic JSON dump (sorted keys, rounded floats upstream)."""
+    with open(path, "w") as f:
+        json.dump(report, f, sort_keys=True, indent=1)
+    return path

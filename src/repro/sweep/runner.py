@@ -1,0 +1,193 @@
+"""Execute sweep cells: packed + sharded by default, per-cell as reference.
+
+``run_pack`` is the mega-batch path: one template env/agent/driver per
+pack (the traced constants), per-cell params / exit masks / RNG streams
+as batched data, the whole episode vmapped over the cell axis inside one
+``lax.scan`` and the cell axis sharded over available devices
+(``sharding.fleet``; a 1-device host runs the identical program without
+the placement). Per-cell metrics come from the driver's device-resident
+accumulator, so the only host transfer is a handful of scalars per cell
+at the very end.
+
+``run_cell`` is the sequential reference: an ordinary ``RolloutDriver``
+run for one cell, sharing the exact seed derivation (``cell_keys``) —
+used by the equivalence tests and as the baseline in
+``benchmarks/sweep_throughput.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent import (METHOD_SPECS, OffloadingAgent, init_params,
+                              make_exit_mask)
+from repro.mec.env import MECEnv
+from repro.mec.scenarios import make_scenario
+from repro.rollout.driver import RolloutDriver, carry_metrics
+from repro.rollout.metrics import metrics_finalize
+from repro.sharding.fleet import pad_to_devices, shard_leading_axis
+from repro.sweep.packer import Pack, pack_cells
+from repro.sweep.spec import Cell, SweepSpec, cell_keys
+from repro.sweep.store import SweepStore
+
+
+def _scenario_env(cell: Cell) -> MECEnv:
+    cfg = make_scenario(cell.scenario, n_devices=cell.n_devices,
+                        slot_ms=cell.slot_ms, **dict(cell.overrides))
+    return MECEnv(cfg)
+
+
+def _template_driver(cell: Cell, family: str):
+    """Shared traced structure for every cell in a pack. The template's
+    own params/mask are never used — they are replaced per cell."""
+    env = _scenario_env(cell)
+    agent = OffloadingAgent(env, jax.random.PRNGKey(0), actor=family,
+                            early_exit=True,
+                            buffer_size=cell.replay_capacity,
+                            batch_size=cell.batch_size,
+                            train_every=cell.train_every)
+    return env, agent, RolloutDriver(agent, n_fleets=cell.n_fleets)
+
+
+def _finish_row(row: dict, cell: Cell) -> dict:
+    row["tasks"] = int(row["tasks"])
+    row["train_steps"] = int(row["train_steps"])
+    if row["final_loss"] is not None and not np.isfinite(row["final_loss"]):
+        row["final_loss"] = None
+    row.update(scenario=cell.scenario, method=cell.method, seed=cell.seed,
+               cell=cell.cell_hash)
+    return row
+
+
+# ------------------------------------------------------------------ packed
+class PackProgram:
+    """One pack's compiled episode + its batched inputs.
+
+    Construction builds the template driver, per-cell data and the jitted
+    episode; ``run()`` executes it. Re-running the same program reuses the
+    compile cache, so a second ``run()`` is the steady-state (resumed
+    sweep) rate — which is what ``benchmarks/sweep_throughput.py`` times
+    as ``packed_warm``.
+    """
+
+    def __init__(self, pack: Pack, *, mesh=None):
+        self.pack = pack
+        cells = list(pack.cells)
+        ref = cells[0]
+        env, agent, drv = _template_driver(ref, pack.family)
+        self._env = env
+
+        pkeys = jnp.stack([cell_keys(c)[0] for c in cells])
+        rkeys = jnp.stack([cell_keys(c)[1] for c in cells])
+        masks = jnp.stack([
+            make_exit_mask(env.N, env.L, METHOD_SPECS[c.method]["early_exit"])
+            for c in cells])
+
+        # pad the cell axis up to the device count (results discarded)
+        n_real = len(cells)
+        n_pad = pad_to_devices(n_real, mesh) - n_real
+        if n_pad:
+            rep = lambda x: jnp.concatenate(
+                [x, jnp.repeat(x[-1:], n_pad, axis=0)], axis=0)
+            pkeys, rkeys, masks = rep(pkeys), rep(rkeys), rep(masks)
+
+        params = jax.vmap(lambda k: init_params(pack.family, env, k))(pkeys)
+        opt_states = jax.vmap(agent.opt.init)(params)
+        carries = jax.vmap(
+            lambda k, p, o: drv.init_carry(k, params=p, opt_state=o))(
+            rkeys, params, opt_states)
+        self._carries, self._masks = shard_leading_axis((carries, masks),
+                                                        mesh)
+
+        def episode(cs, ms):
+            def step(c, _):
+                new_c, _ = jax.vmap(drv._slot)(c, ms)
+                return new_c, None
+
+            final, _ = jax.lax.scan(step, cs, None, length=ref.n_slots)
+            return jax.vmap(lambda m: metrics_finalize(
+                m, slot_s=env.cfg.slot_s,
+                n_fleets=ref.n_fleets))(final.metrics)
+
+        self._episode = jax.jit(episode)
+
+    def run(self) -> list:
+        """Execute the episode; one metrics row per cell, in pack order."""
+        metrics = self._episode(self._carries, self._masks)
+        metrics = {k: np.asarray(v) for k, v in metrics.items()}
+        rows = []
+        for i, cell in enumerate(self.pack.cells):
+            row = {k: float(v[i]) for k, v in metrics.items()}
+            rows.append(_finish_row(row, cell))
+        return rows
+
+
+def run_pack(pack: Pack, *, mesh=None) -> list:
+    """Run every cell of a pack in one vmapped (optionally sharded) episode.
+
+    Returns one metrics row per cell, in pack order.
+    """
+    return PackProgram(pack, mesh=mesh).run()
+
+
+# -------------------------------------------------------------- sequential
+def run_cell(cell: Cell) -> dict:
+    """One cell through a plain ``RolloutDriver`` (reference/baseline)."""
+    env = _scenario_env(cell)
+    pkey, rkey = cell_keys(cell)
+    spec = METHOD_SPECS[cell.method]
+    agent = OffloadingAgent(env, pkey, actor=spec["actor"],
+                            early_exit=spec["early_exit"],
+                            buffer_size=cell.replay_capacity,
+                            batch_size=cell.batch_size,
+                            train_every=cell.train_every)
+    drv = RolloutDriver(agent, n_fleets=cell.n_fleets)
+    carry, _ = drv.run(rkey, cell.n_slots, mode="scan")
+    row = carry_metrics(carry, slot_s=env.cfg.slot_s,
+                        n_fleets=cell.n_fleets)
+    return _finish_row(row, cell)
+
+
+# ------------------------------------------------------------------- sweep
+def run_sweep(spec: SweepSpec, *, store: Optional[SweepStore] = None,
+              mesh=None, packed: bool = True, log=print) -> list:
+    """Run the whole grid; returns rows in ``spec.expand()`` order.
+
+    With a store, finished cells are loaded instead of recomputed and
+    never rewritten. The execution unit is the *pack*: a pack runs iff
+    any member cell is missing (pack composition depends only on the
+    grid, so a resumed sweep recomputes missing cells inside the exact
+    same vmapped batch it would have run the first time).
+    """
+    cells = spec.expand()
+    packs = pack_cells(cells)
+    results: dict = {}
+    for pack in packs:
+        missing = [c for c in pack.cells
+                   if store is None or not store.has(c)]
+        for c in pack.cells:
+            if c not in missing:
+                results[c] = store.load(c)
+        if not missing:
+            log(f"  [sweep] {pack.label()}: all "
+                f"{len(pack.cells)} cells cached")
+            continue
+        log(f"  [sweep] {pack.label()}: running "
+            f"({len(pack.cells) - len(missing)} cached)")
+        if packed:
+            # the whole pack runs (one compiled episode), but cached cells
+            # keep their stored rows — never recomputed results
+            pairs = [(c, row) for c, row in zip(pack.cells,
+                                                run_pack(pack, mesh=mesh))
+                     if c in missing]
+        else:
+            # per-cell runs are independent: execute only the missing ones
+            pairs = [(c, run_cell(c)) for c in missing]
+        for c, row in pairs:
+            results[c] = row
+            if store is not None:
+                store.save(c, row)
+    return [results[c] for c in cells]

@@ -1,0 +1,108 @@
+"""Declarative sweep grids and their expansion into hashed cells.
+
+A ``SweepSpec`` is the experiment section of the paper as data: which
+scenarios (figure columns), which methods (table rows), how many seeds
+(error bars), plus the run-shape knobs every cell shares. ``expand()``
+produces one ``Cell`` per grid point; ``cell_hash`` canonically hashes
+everything that can change a cell's numbers, which keys the resumable
+result store (same hash => same result, safe to reuse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import NamedTuple, Tuple
+
+import jax
+
+from repro.mec.scenarios import SCENARIOS
+
+
+class Cell(NamedTuple):
+    """One grid point. ``overrides`` is a sorted (key, value) tuple so
+    cells stay hashable."""
+    scenario: str
+    method: str
+    seed: int
+    n_devices: int
+    slot_ms: float
+    n_slots: int
+    n_fleets: int
+    replay_capacity: int
+    batch_size: int
+    train_every: int
+    overrides: Tuple[Tuple[str, object], ...] = ()
+
+    @property
+    def cell_hash(self) -> str:
+        payload = json.dumps(self._asdict(), sort_keys=True, default=str)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+    def label(self) -> str:
+        return f"{self.scenario}/{self.method}/s{self.seed}"
+
+
+def cell_keys(cell: Cell):
+    """(params_key, run_key) for a cell — THE seed derivation.
+
+    Both the packed runner and the sequential reference path use this,
+    so a cell's numbers are independent of how it was executed (packed
+    vs per-cell, resumed vs fresh) — which is what makes store reuse and
+    the packed-vs-sequential equivalence test meaningful. Methods share
+    the same stream per seed (paired-seed comparisons, as in the paper's
+    per-figure ablations).
+    """
+    base = jax.random.PRNGKey(cell.seed)
+    return jax.random.fold_in(base, 1), jax.random.fold_in(base, 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """The grid: scenarios x methods x seeds, plus shared run shape."""
+    scenarios: Tuple[str, ...]
+    methods: Tuple[str, ...] = ("grle", "grl", "drooe", "droo")
+    seeds: Tuple[int, ...] = (0,)
+    n_devices: int = 14
+    slot_ms: float = 30.0
+    n_slots: int = 300
+    n_fleets: int = 1
+    replay_capacity: int = 128
+    batch_size: int = 64
+    train_every: int = 10
+    overrides: Tuple[Tuple[str, object], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "methods",
+                           tuple(m.lower() for m in self.methods))
+        object.__setattr__(self, "seeds", tuple(int(s) for s in self.seeds))
+        object.__setattr__(self, "overrides",
+                           tuple(sorted(tuple(self.overrides))))
+        unknown = [s for s in self.scenarios if s not in SCENARIOS]
+        if unknown:
+            raise ValueError(f"unknown scenarios {unknown}; "
+                             f"known: {sorted(SCENARIOS)}")
+
+    @classmethod
+    def from_names(cls, scenarios: str, methods: str, seeds, **kw):
+        """CLI-friendly constructor: comma-separated names, int seed count."""
+        if isinstance(seeds, int):
+            seeds = tuple(range(seeds))
+        return cls(scenarios=tuple(s for s in scenarios.split(",") if s),
+                   methods=tuple(m for m in methods.split(",") if m),
+                   seeds=tuple(seeds), **kw)
+
+    def expand(self) -> list:
+        """Grid -> cells, in deterministic (scenario, method, seed) order."""
+        return [
+            Cell(scenario=sc, method=me, seed=se, n_devices=self.n_devices,
+                 slot_ms=self.slot_ms, n_slots=self.n_slots,
+                 n_fleets=self.n_fleets,
+                 replay_capacity=self.replay_capacity,
+                 batch_size=self.batch_size, train_every=self.train_every,
+                 overrides=self.overrides)
+            for sc in self.scenarios
+            for me in self.methods
+            for se in self.seeds
+        ]

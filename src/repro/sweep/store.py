@@ -1,0 +1,48 @@
+"""Resumable on-disk result store, keyed by cell hash.
+
+One JSON file per cell under the store root. ``cell_hash`` covers every
+run-affecting field of the cell, so a hash hit is a guarantee that the
+stored numbers are the ones this sweep would produce. Finished cells are
+never rewritten (``save`` refuses to clobber), which makes a
+killed-then-resumed sweep reuse them byte-identically. Resume
+granularity follows the execution unit: per-cell runs skip finished
+cells entirely; a partially-cached *pack* re-executes as one batch, with
+only its missing cells stored.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.sweep.spec import Cell
+
+
+class SweepStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def path(self, cell: Cell) -> str:
+        return os.path.join(self.root, f"{cell.cell_hash}.json")
+
+    def has(self, cell: Cell) -> bool:
+        return os.path.exists(self.path(cell))
+
+    def load(self, cell: Cell) -> dict:
+        with open(self.path(cell)) as f:
+            return json.load(f)
+
+    def save(self, cell: Cell, row: dict) -> str:
+        """Write a cell's row; existing results are left untouched."""
+        path = self.path(cell)
+        if os.path.exists(path):
+            return path
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(row, f, sort_keys=True, indent=1)
+        os.replace(tmp, path)   # atomic: a killed sweep leaves no torn file
+        return path
+
+    def completed(self) -> int:
+        return len([p for p in os.listdir(self.root)
+                    if p.endswith(".json")])

@@ -1,0 +1,296 @@
+"""Sweep subsystem: spec expansion/hashing, packing, packed-vs-sequential
+equivalence, resumable store byte-identity, report ratios, CLI."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.sweep import (
+    SweepSpec,
+    SweepStore,
+    build_report,
+    cell_keys,
+    format_markdown,
+    pack_cells,
+    run_cell,
+    run_pack,
+    run_sweep,
+    write_report,
+)
+
+
+def tiny_spec(**kw):
+    base = dict(scenarios=("fig5_baseline",), methods=("grle", "grl"),
+                seeds=(0, 1), n_devices=3, n_slots=20, replay_capacity=16,
+                batch_size=4, train_every=5)
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+# ---------------------------------------------------------------- spec/cells
+class TestSpec:
+    def test_expand_order_and_count(self):
+        spec = tiny_spec(scenarios=("fig5_baseline", "fig6_capacity"))
+        cells = spec.expand()
+        assert len(cells) == 2 * 2 * 2
+        assert [c.scenario for c in cells[:4]] == ["fig5_baseline"] * 4
+        assert [(c.method, c.seed) for c in cells[:4]] == [
+            ("grle", 0), ("grle", 1), ("grl", 0), ("grl", 1)]
+
+    def test_from_names_cli_form(self):
+        spec = SweepSpec.from_names("fig5_baseline,fig6_capacity",
+                                    "grle,droo", 3)
+        assert spec.scenarios == ("fig5_baseline", "fig6_capacity")
+        assert spec.methods == ("grle", "droo")
+        assert spec.seeds == (0, 1, 2)
+
+    def test_unknown_scenario_rejected(self):
+        with pytest.raises(ValueError, match="unknown scenarios"):
+            tiny_spec(scenarios=("not_a_scenario",))
+
+    def test_hash_covers_run_shape(self):
+        a, b = tiny_spec().expand()[0], tiny_spec(n_slots=21).expand()[0]
+        assert a.cell_hash != b.cell_hash
+        assert a.cell_hash == tiny_spec().expand()[0].cell_hash
+
+    def test_cell_keys_shared_across_methods(self):
+        """Paired seeds: methods see identical streams per seed."""
+        grle, _, grl, _ = tiny_spec().expand()
+        for ka, kb in zip(cell_keys(grle), cell_keys(grl)):
+            np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+
+
+# ------------------------------------------------------------------- packer
+class TestPacker:
+    def test_packs_by_scenario_and_family(self):
+        spec = tiny_spec(scenarios=("fig5_baseline", "fig6_capacity"),
+                         methods=("grle", "grl", "drooe", "droo"))
+        packs = pack_cells(spec.expand())
+        assert len(packs) == 4        # 2 scenarios x {gcn, mlp}
+        for pack in packs:
+            assert len(pack.cells) == 4    # 2 methods x 2 seeds
+            assert len({c.scenario for c in pack.cells}) == 1
+
+    def test_pack_composition_independent_of_completion(self):
+        """Packing is a pure function of the grid (resume stability)."""
+        cells = tiny_spec().expand()
+        full = pack_cells(cells)
+        shuffled = pack_cells(list(reversed(cells)))
+        assert [p.cells for p in full] == [p.cells for p in shuffled]
+
+
+# ------------------------------------------------------- packed equivalence
+class TestPackedEquivalence:
+    def test_packed_matches_sequential(self):
+        """One vmapped mega-batch reproduces per-cell driver runs."""
+        spec = tiny_spec()
+        (pack,) = pack_cells(spec.expand())
+        packed = run_pack(pack)
+        for cell, row in zip(pack.cells, packed):
+            ref = run_cell(cell)
+            assert row["scenario"] == ref["scenario"]
+            assert row["method"] == ref["method"]
+            assert row["seed"] == ref["seed"]
+            assert row["tasks"] == ref["tasks"]
+            assert row["train_steps"] == ref["train_steps"]
+            for k in ("avg_accuracy", "ssp", "deadline_miss",
+                      "throughput_tps", "avg_reward"):
+                np.testing.assert_allclose(row[k], ref[k], rtol=1e-4,
+                                           err_msg=f"{cell.label()}:{k}")
+
+    def test_early_exit_mask_respected_per_cell(self):
+        """GRL cells inside a GRLE pack never see early exits: their
+        accuracy is exactly the final-exit accuracy on every success."""
+        from repro.mec import make_scenario
+        spec = tiny_spec(seeds=(0,))
+        (pack,) = pack_cells(spec.expand())
+        rows = {r["method"]: r for r in run_pack(pack)}
+        cfg = make_scenario("fig5_baseline", n_devices=3)
+        final_acc = cfg.exit_accuracy[-1]
+        grl = rows["grl"]
+        np.testing.assert_allclose(
+            grl["avg_accuracy"], final_acc * grl["ssp"], rtol=1e-5)
+        # GRLE actually uses earlier exits somewhere (strictly lower acc)
+        assert rows["grle"]["avg_accuracy"] < grl["avg_accuracy"]
+
+
+# -------------------------------------------------------------------- store
+class TestStore:
+    def test_roundtrip_and_no_clobber(self, tmp_path):
+        store = SweepStore(str(tmp_path))
+        cell = tiny_spec().expand()[0]
+        store.save(cell, {"x": 1.0})
+        assert store.has(cell) and store.load(cell) == {"x": 1.0}
+        store.save(cell, {"x": 2.0})          # refuses to overwrite
+        assert store.load(cell) == {"x": 1.0}
+
+    def test_killed_then_resumed_sweep_is_byte_identical(self, tmp_path):
+        spec = tiny_spec()
+        store_dir = tmp_path / "store"
+        store = SweepStore(str(store_dir))
+        rows_full = run_sweep(spec, store=store, log=lambda *_: None)
+        report_a = json.dumps(build_report(rows_full), sort_keys=True)
+        blobs = {p: (store_dir / p).read_bytes()
+                 for p in os.listdir(store_dir)}
+        assert len(blobs) == 4
+
+        # kill: lose one cell, resume the sweep
+        victim = sorted(blobs)[1]
+        (store_dir / victim).unlink()
+        rows_resumed = run_sweep(spec, store=store, log=lambda *_: None)
+        report_b = json.dumps(build_report(rows_resumed), sort_keys=True)
+        assert report_a == report_b
+        for p, blob in blobs.items():
+            assert (store_dir / p).read_bytes() == blob, p
+
+    def test_sequential_resume_runs_only_missing_cells(self, tmp_path,
+                                                       monkeypatch):
+        """Per-cell mode executes exactly the missing cells on resume."""
+        import repro.sweep.runner as runner_mod
+        spec = tiny_spec()
+        cells = spec.expand()
+        store = SweepStore(str(tmp_path))
+        for c in cells[1:]:
+            store.save(c, {"cached": True})
+        executed = []
+
+        def fake_run_cell(cell):
+            executed.append(cell)
+            return {"cached": False}
+
+        monkeypatch.setattr(runner_mod, "run_cell", fake_run_cell)
+        rows = runner_mod.run_sweep(spec, store=store, packed=False,
+                                    log=lambda *_: None)
+        assert executed == [cells[0]]
+        assert rows[0] == {"cached": False}
+        assert all(r == {"cached": True} for r in rows[1:])
+
+    def test_fully_cached_sweep_runs_nothing(self, tmp_path):
+        spec = tiny_spec()
+        store = SweepStore(str(tmp_path))
+        run_sweep(spec, store=store, log=lambda *_: None)
+        msgs = []
+        run_sweep(spec, store=store, log=msgs.append)
+        assert all("cached" in m for m in msgs)
+
+
+# ------------------------------------------------------------------- report
+class TestReport:
+    @staticmethod
+    def _row(scenario, method, seed, acc, tps=10.0, ssp=1.0):
+        return dict(scenario=scenario, method=method, seed=seed,
+                    avg_accuracy=acc, ssp=ssp, deadline_miss=1.0 - ssp,
+                    throughput_tps=tps, avg_reward=0.5)
+
+    def test_ratios_vs_baselines(self):
+        rows = [self._row("fig5_baseline", "grle", s, 0.9) for s in (0, 1)]
+        rows += [self._row("fig5_baseline", "grl", s, 0.45) for s in (0, 1)]
+        rows += [self._row("fig5_baseline", "drooe", s, 0.6) for s in (0, 1)]
+        rep = build_report(rows)
+        ratios = rep["scenarios"]["fig5_baseline"]["ratios"]
+        assert ratios["grle_vs_grl"]["avg_accuracy"] == pytest.approx(2.0)
+        assert ratios["grle_vs_drooe"]["avg_accuracy"] == pytest.approx(1.5)
+        assert "grle_vs_droo" not in ratios      # droo absent from grid
+
+    def test_mean_std_over_seeds(self):
+        rows = [self._row("fig5_baseline", "grle", 0, 0.8),
+                self._row("fig5_baseline", "grle", 1, 0.6)]
+        stats = build_report(rows)["scenarios"]["fig5_baseline"]["methods"]
+        acc = stats["grle"]["avg_accuracy"]
+        assert acc["mean"] == pytest.approx(0.7)
+        assert acc["std"] == pytest.approx(0.1)
+        assert acc["n"] == 2
+
+    def test_markdown_and_json_deterministic(self, tmp_path):
+        rows = [self._row("fig5_baseline", m, 0, a)
+                for m, a in (("grle", 0.9), ("grl", 0.8))]
+        rep = build_report(rows)
+        md = format_markdown(rep)
+        assert "| grle |" in md and "grle_vs_grl" in md
+        p1 = write_report(rep, str(tmp_path / "a.json"))
+        p2 = write_report(rep, str(tmp_path / "b.json"))
+        assert open(p1, "rb").read() == open(p2, "rb").read()
+
+
+# ----------------------------------------------------------------- sharding
+class TestSharding:
+    def test_fleet_mesh_single_device_is_none(self):
+        from repro.sharding.fleet import fleet_mesh
+        assert fleet_mesh() is None          # conftest: 1 CPU device
+
+    def test_pad_to_devices(self):
+        from repro.sharding.fleet import pad_to_devices
+
+        class M:
+            class devices:
+                size = 4
+
+        assert pad_to_devices(6, M) == 8
+        assert pad_to_devices(8, M) == 8
+        assert pad_to_devices(5, None) == 5
+
+    def test_sharded_pack_matches_sequential_subprocess(self):
+        """4 fake CPU devices: sharded cells reproduce per-cell results
+        (pad 2 cells -> device multiple, drop padding), and the driver's
+        sharded-fleet entry point reproduces the plain scan."""
+        code = (
+            "import jax, numpy as np\n"
+            "from repro.sharding.fleet import fleet_mesh\n"
+            "from repro.sweep import SweepSpec, pack_cells, run_pack, "
+            "run_cell\n"
+            "spec = SweepSpec(scenarios=('fig5_baseline',), "
+            "methods=('grle', 'grl'), seeds=(0,), n_devices=3, n_slots=15, "
+            "replay_capacity=16, batch_size=4, train_every=5)\n"
+            "mesh = fleet_mesh()\n"
+            "assert mesh is not None and mesh.devices.size == 4\n"
+            "(pack,) = pack_cells(spec.expand())\n"
+            "for cell, row in zip(pack.cells, run_pack(pack, mesh=mesh)):\n"
+            "    ref = run_cell(cell)\n"
+            "    for k in ('avg_accuracy', 'ssp', 'avg_reward'):\n"
+            "        np.testing.assert_allclose(row[k], ref[k], rtol=1e-4)\n"
+            "from repro.core import make_agent\n"
+            "from repro.mec import MECConfig, MECEnv\n"
+            "from repro.rollout import RolloutDriver, carry_metrics\n"
+            "env = MECEnv(MECConfig(n_devices=3, n_servers=2))\n"
+            "agent = make_agent('grle', env, jax.random.PRNGKey(0), "
+            "buffer_size=16, batch_size=4, train_every=5)\n"
+            "drv = RolloutDriver(agent, n_fleets=8)\n"
+            "c_sh, _ = drv.run_sharded(jax.random.PRNGKey(3), 15, mesh=mesh)\n"
+            "c_ref, _ = drv.run(jax.random.PRNGKey(3), 15, mode='scan')\n"
+            "m_sh = carry_metrics(c_sh, slot_s=env.cfg.slot_s, n_fleets=8)\n"
+            "m_ref = carry_metrics(c_ref, slot_s=env.cfg.slot_s, n_fleets=8)\n"
+            "for k in ('ssp', 'avg_accuracy', 'avg_reward', 'final_loss'):\n"
+            "    np.testing.assert_allclose(m_sh[k], m_ref[k], rtol=1e-4)\n"
+            "assert m_sh['tasks'] == m_ref['tasks']\n"
+            "print('SHARDED-OK')\n"
+        )
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                   JAX_PLATFORMS="cpu",
+                   PYTHONPATH="src" + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        p = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=600)
+        assert p.returncode == 0, p.stderr[-2000:]
+        assert "SHARDED-OK" in p.stdout
+
+
+# ---------------------------------------------------------------------- CLI
+class TestCLI:
+    def test_launch_sweep_end_to_end(self, tmp_path, capsys):
+        from repro.launch.sweep import main
+        report = main([
+            "--scenarios", "fig5_baseline", "--methods", "grle,droo",
+            "--seeds", "1", "--slots", "15", "--devices", "3",
+            "--replay", "16", "--batch", "4", "--train-every", "5",
+            "--store", str(tmp_path / "store"),
+            "--report", str(tmp_path / "report.json")])
+        assert (tmp_path / "report.json").exists()
+        sc = report["scenarios"]["fig5_baseline"]
+        assert set(sc["methods"]) == {"grle", "droo"}
+        assert "grle_vs_droo" in sc["ratios"]
+        out = capsys.readouterr().out
+        assert "| grle |" in out
