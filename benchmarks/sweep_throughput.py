@@ -2,15 +2,23 @@
 
     PYTHONPATH=src python -m benchmarks.sweep_throughput [--quick]
 
-Measures cells/sec over a one-pack grid (one scenario, one actor family,
-methods x seeds) end-to-end, compile included — that is the real cost of
-running a sweep, and it is exactly where the packed path wins: the
-sequential loop builds a fresh agent + driver per cell (C compiles, C
-scan dispatches), the packed path compiles one vmapped episode and runs
-every cell in it at once, cell axis sharded when devices allow.
-Acceptance floor: packed >= 4x sequential cells/sec. A second packed
-measurement with warm caches isolates the steady-state (resumed-sweep)
-rate. Writes BENCH_sweep.json at the repo root.
+Two measurements, both end-to-end with compile time included — that is
+the real cost of running a sweep:
+
+* single-scenario: a one-pack grid (one scenario, one actor family,
+  methods x seeds) packed vs a sequential per-cell loop. The loop builds
+  a fresh agent + driver per cell (C compiles, C scan dispatches); the
+  packed path compiles one vmapped episode. Acceptance floor: packed
+  >= 4x sequential cells/sec.
+* mixed-scenario (scenario-as-data): a K-scenario grid run as one
+  cross-scenario mega-pack (1 compile, per-cell ``ScenarioParams`` as
+  batched data) vs the pre-split baseline of one pack per scenario
+  (K compiles). Acceptance floor: cross-pack >= 2x per-scenario packs
+  cold at K=4.
+
+A second warm measurement of each packed program isolates the
+steady-state (resumed-sweep) rate. Writes BENCH_sweep.json at the repo
+root (full runs only).
 """
 from __future__ import annotations
 
@@ -27,7 +35,16 @@ from repro.sweep import SweepSpec, pack_cells, run_cell
 from repro.sweep.runner import PackProgram
 
 
-def run(quick: bool = False):
+def _bench_rows(rows, name, wall, n, derived):
+    cps = n / wall
+    rows.append({"name": name, "cells_per_s": round(cps, 3),
+                 "wall_s": round(wall, 2), "derived": derived})
+    print(f"  {name:28s} {cps:8.3f} cells/s  ({wall:6.2f}s)  {derived}",
+          flush=True)
+
+
+def run_single(rows, quick: bool):
+    """One-scenario grid: packed vs sequential per-cell loop."""
     m, t, seeds = (6, 60, 2) if quick else (8, 200, 8)
     spec = SweepSpec.from_names("fig5_baseline", "grle,grl", seeds,
                                 n_devices=m, n_slots=t, replay_capacity=64,
@@ -53,36 +70,86 @@ def run(quick: bool = False):
     prog.run()
     packed_warm_s = time.perf_counter() - t0
 
-    rows = []
-
-    def row(name, wall, derived):
-        cps = n / wall
-        rows.append({"name": name, "cells_per_s": round(cps, 3),
-                     "wall_s": round(wall, 2), "derived": derived})
-        print(f"  {name:24s} {cps:8.3f} cells/s  ({wall:6.2f}s)  {derived}",
-              flush=True)
-
     shape = (f"C={n} (grle,grl x {seeds} seeds) M={m} T={t}"
              + (f" sharded@{mesh.devices.size}" if mesh else " 1-device"))
-    row("sweep/sequential", seq_s, shape)
-    row("sweep/packed", packed_s,
-        f"{shape} speedup={seq_s / packed_s:.1f}x")
-    row("sweep/packed_warm", packed_warm_s,
-        f"{shape} speedup={seq_s / packed_warm_s:.1f}x")
-
-    save_rows("sweep_throughput", rows)
-    if not quick:   # the committed artifact records the full grid only
-        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        with open(os.path.join(root, "BENCH_sweep.json"), "w") as f:
-            json.dump(rows, f, indent=1)
+    _bench_rows(rows, "sweep/sequential", seq_s, n, shape)
+    _bench_rows(rows, "sweep/packed", packed_s, n,
+                f"{shape} speedup={seq_s / packed_s:.1f}x")
+    _bench_rows(rows, "sweep/packed_warm", packed_warm_s, n,
+                f"{shape} speedup={seq_s / packed_warm_s:.1f}x")
     floor = ("(acceptance floor 4x)" if not quick
              else "(quick smoke; the 4x floor applies to the full grid)")
     print(f"  => packed vs sequential: {seq_s / packed_s:.1f}x {floor}",
           flush=True)
+
+
+def run_mixed(rows, quick: bool):
+    """K-scenario grid: one cross-scenario pack vs one pack per scenario.
+
+    Shorter episodes than the single-scenario grid (T=100, 2 seeds): this
+    measurement isolates *compile amortization* — the K-compiles -> 1
+    cost that scenario-as-data removes — which long episodes would dilute
+    with execution time that is identical on both sides.
+    """
+    m, t, seeds = (6, 60, 1) if quick else (8, 100, 2)
+    scenarios = "fig5_baseline,fig6_capacity,fig7_jitter,fig8_csi"
+    spec = SweepSpec.from_names(scenarios, "grle,grl", seeds,
+                                n_devices=m, n_slots=t, replay_capacity=64,
+                                batch_size=16, train_every=10)
+    cells = spec.expand()
+    k = len(spec.scenarios)
+    mesh = fleet_mesh()
+    n = len(cells)
+
+    per_scenario = pack_cells(cells, split_scenarios=True)
+    assert len(per_scenario) == k
+    t0 = time.perf_counter()
+    for pack in per_scenario:         # the pre-scenario-as-data baseline:
+        PackProgram(pack, mesh=mesh).run()   # K compiles, K dispatches
+    base_s = time.perf_counter() - t0
+
+    (pack,) = pack_cells(cells)       # scenario-as-data: 1 compile
+    t0 = time.perf_counter()
+    prog = PackProgram(pack, mesh=mesh)
+    prog.run()
+    cross_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    prog.run()
+    cross_warm_s = time.perf_counter() - t0
+
+    shape = (f"C={n} K={k} (grle,grl x {seeds} seeds) M={m} T={t}"
+             + (f" sharded@{mesh.devices.size}" if mesh else " 1-device"))
+    _bench_rows(rows, "sweep/mixed_per_scenario", base_s, n, shape)
+    _bench_rows(rows, "sweep/mixed_cross_pack", cross_s, n,
+                f"{shape} speedup={base_s / cross_s:.1f}x")
+    _bench_rows(rows, "sweep/mixed_cross_pack_warm", cross_warm_s, n,
+                f"{shape} speedup={base_s / cross_warm_s:.1f}x")
+    floor = ("(acceptance floor 2x)" if not quick
+             else "(quick smoke; the 2x floor applies to the full grid)")
+    print(f"  => cross-scenario pack vs per-scenario packs: "
+          f"{base_s / cross_s:.1f}x cold {floor}", flush=True)
+
+
+def run(quick: bool = False, mixed_only: bool = False):
+    rows = []
+    if not mixed_only:
+        run_single(rows, quick)
+    run_mixed(rows, quick)
+    save_rows("sweep_throughput", rows)
+    # the committed artifact records the complete full-grid run only —
+    # a partial (--mixed/--quick) run must not truncate it
+    if not quick and not mixed_only:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(root, "BENCH_sweep.json"), "w") as f:
+            json.dump(rows, f, indent=1)
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--mixed", action="store_true",
+                    help="run only the mixed-scenario comparison")
+    args = ap.parse_args()
+    run(quick=args.quick, mixed_only=args.mixed)

@@ -164,11 +164,16 @@ class OffloadingAgent:
 
     # --------------------------------------------------------------- decision
     def _decide(self, params, state: MECState, tasks: SlotTasks, key,
-                exit_mask=None):
-        """Fused actor+critic pass (one device dispatch per slot)."""
+                exit_mask=None, sp=None):
+        """Fused actor+critic pass (one device dispatch per slot).
+
+        ``sp`` is an optional ``ScenarioParams`` pytree threaded into the
+        env's observe/evaluate — traced data, so callers can batch it
+        (per-cell in sweep packs, per-fleet in domain-randomized drivers).
+        """
         if exit_mask is None:
             exit_mask = self._exit_mask
-        obs = self.env.observe(state, tasks)
+        obs = self.env.observe(state, tasks, sp)
         g = build_graph(obs, self.env.N, self.env.L)
         x_hat, _ = self._scores(params, g, exit_mask)
         cands = one_hot_candidates(x_hat, self.n_candidates)
@@ -180,14 +185,16 @@ class OffloadingAgent:
             rand = jnp.argmax(jnp.where(allowed[None], gumbel, -jnp.inf),
                               axis=-1).astype(jnp.int32)
             cands = jnp.concatenate([cands, rand], axis=0)
-        q = self.env.evaluate(state, tasks, cands)
+        q = self.env.evaluate(state, tasks, cands, sp)
         best = jnp.argmax(q)
         return cands[best], q[best], g
 
-    def act(self, state: MECState, tasks: SlotTasks, *, train: bool = True):
+    def act(self, state: MECState, tasks: SlotTasks, *, train: bool = True,
+            sp=None):
         """Algorithm 1, one slot. Returns (decision [M], info dict)."""
         self._key, sub = jax.random.split(self._key)
-        decision, q_best, g = self._decide_fn(self.params, state, tasks, sub)
+        decision, q_best, g = self._decide_fn(self.params, state, tasks, sub,
+                                              None, sp)
         info = {"q_est": float(q_best), "n_candidates": self.n_candidates}
         if train:
             self.replay.add(g, decision)

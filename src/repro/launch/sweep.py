@@ -5,8 +5,11 @@
         --methods grle,grl,drooe,droo --seeds 3
 
 Expands the (scenario x method x seed) grid, packs same-shape cells into
-vmapped mega-batches, shards the cell axis over available devices, and
-writes per-cell results (resumable store) plus an aggregate report with
+vmapped mega-batches — across scenarios: per-cell scenario knobs are
+traced data (``ScenarioParams``), so the whole grid above compiles two
+episode programs (one per actor family) regardless of how many scenarios
+it spans — shards the cell axis over available devices, and writes
+per-cell results (resumable store) plus an aggregate report with
 GRLE-vs-baseline ratios. Re-invoking with the same grid skips finished
 cells.
 """

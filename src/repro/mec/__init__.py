@@ -1,4 +1,5 @@
-from repro.mec.config import MECConfig
+from repro.mec.config import (MECConfig, ScenarioParams, PRIMITIVE_FIELDS,
+                              derive_params)
 from repro.mec.profiles import (
     VGG16_TABLE_I,
     CANDIDATE_EXITS,
@@ -12,14 +13,21 @@ from repro.mec.scenarios import (
     DYNAMIC_SCENARIOS,
     PAPER_FIGURES,
     SCENARIOS,
+    ScenarioSpace,
     expand_grid,
+    interpolate_params,
     make_scenario,
+    scenario_params,
+    scenario_space,
 )
 
 __all__ = [
     "MECConfig", "MECEnv", "MECState", "SlotTasks", "SlotResult",
+    "ScenarioParams", "PRIMITIVE_FIELDS", "derive_params",
     "VGG16_TABLE_I", "CANDIDATE_EXITS", "exit_profile_gpu",
     "exit_profile_tpu_v5e", "llm_exit_profile",
     "RunningMetrics", "make_scenario", "SCENARIOS",
     "PAPER_FIGURES", "DYNAMIC_SCENARIOS", "expand_grid",
+    "ScenarioSpace", "scenario_space", "scenario_params",
+    "interpolate_params",
 ]

@@ -1,12 +1,104 @@
-"""MEC network configuration (paper §VI-A defaults)."""
+"""MEC network configuration (paper §VI-A defaults).
+
+Two layers, split so scenarios are *data* rather than compile-time
+constants:
+
+* ``MECConfig`` — the static shape/structure of a network instance:
+  device/server/exit counts, the workload *family* (``iid``/``poisson``/
+  ``mmpp``), the slot length, and default values for every numeric knob.
+  Two configs with equal ``static_signature()`` trace to the same jaxpr.
+* ``ScenarioParams`` — an array pytree holding every numeric scenario
+  knob (capacity range, jitter, CSI error, arrival/churn/AR(1)
+  parameters, rate/task-size ranges, exit times/accuracy). It is threaded
+  through ``MECEnv``/``WorkloadGen``/``RolloutDriver`` as a *traced*
+  argument, so scenarios can be stacked along a batch axis and ``vmap``-ed:
+  one compiled episode serves every scenario that shares the static
+  signature (the sweep packer's cross-scenario mega-batches) and
+  randomized/interpolated scenario fleets (``mec.scenarios.ScenarioSpace``).
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.mec.profiles import exit_profile_gpu
+
+
+class ScenarioParams(NamedTuple):
+    """Every numeric scenario knob as float32 arrays (a vmappable pytree).
+
+    Units are explicit in field names: ``*_kb`` kilobytes, ``*_mbps``
+    megabits/s, ``*_bps`` bits/s, ``*_s`` seconds; probabilities and
+    fractions are unitless in [0, 1]. Leaves may carry leading batch axes
+    (cells in a packed sweep, fleets in a domain-randomized driver run) —
+    every consumer ``vmap``s over them.
+
+    The ``ar1_*``/``rate_bps`` tail is *derived* data (precomputed AR(1)
+    moments and bit-rate clip bounds). ``MECConfig.scenario_params()``
+    computes it in float64 so a config-built pytree reproduces the
+    pre-split baked-constant arithmetic bit-for-bit; ``derive_params``
+    recomputes it in traced float32 for sampled/interpolated scenarios.
+    """
+    task_kb: jax.Array            # [2] task size (lo, hi) in KB
+    rate_mbps: jax.Array          # [2] uplink rate (lo, hi) in Mbps
+    capacity_range: jax.Array     # [2] ES available fraction (lo, hi)
+    inference_jitter: jax.Array   # scalar, ±fraction of t_cmp
+    csi_error: jax.Array          # scalar, ±fraction rate-estimate error
+    connectivity_drop: jax.Array  # scalar, P(device-ES link down)
+    deadline_s: jax.Array         # scalar, per-task deadline (seconds)
+    arrival_rate: jax.Array       # scalar, per-device P(task/slot), poisson
+    mmpp_rates: jax.Array         # [2] (calm, burst) arrival prob
+    mmpp_switch: jax.Array        # [2] (P(calm->burst), P(burst->calm))
+    churn_prob: jax.Array         # scalar, per-slot P(join/leave)
+    ar1_rho: jax.Array            # scalar, AR(1) autocorrelation
+    exit_times_s: jax.Array       # [N, L] nominal per-exit seconds
+    exit_acc: jax.Array           # [L] per-exit accuracy
+    # derived (see derive_params)
+    rate_bps: jax.Array           # [2] rate clip bounds in bits/s
+    ar1_mu_rate: jax.Array        # scalar, AR(1) mean of rate (bps)
+    ar1_noise_rate: jax.Array     # scalar, innovation std of rate:
+                                  #   sigma_rate * sqrt(1 - rho^2)
+    ar1_mu_cap: jax.Array         # scalar, AR(1) mean of capacity
+    ar1_noise_cap: jax.Array      # scalar, innovation std of capacity
+
+
+# Fields a scenario sampler may vary freely; everything after these in the
+# NamedTuple is either structural (exit tables) or derived.
+PRIMITIVE_FIELDS = (
+    "task_kb", "rate_mbps", "capacity_range", "inference_jitter",
+    "csi_error", "connectivity_drop", "deadline_s", "arrival_rate",
+    "mmpp_rates", "mmpp_switch", "churn_prob", "ar1_rho",
+)
+
+
+def derive_params(primitives: dict, exit_times_s, exit_acc) -> ScenarioParams:
+    """Finish a ``ScenarioParams`` from primitive knobs (traced float32).
+
+    Used by ``ScenarioSpace.sample``/``interpolate_params``, where the
+    primitives are already traced arrays — the AR(1) moments and bit-rate
+    bounds must be recomputed from them, never interpolated directly.
+    """
+    p = {k: jnp.asarray(primitives[k], jnp.float32)
+         for k in PRIMITIVE_FIELDS}
+    rate_bps = p["rate_mbps"] * jnp.float32(1e6)
+    cap = p["capacity_range"]
+    rho = p["ar1_rho"]
+    sqrt12 = jnp.float32(np.sqrt(12.0))
+    c = jnp.sqrt(jnp.maximum(1.0 - rho * rho, 0.0))
+    return ScenarioParams(
+        **p,
+        exit_times_s=jnp.asarray(exit_times_s, jnp.float32),
+        exit_acc=jnp.asarray(exit_acc, jnp.float32),
+        rate_bps=rate_bps,
+        ar1_mu_rate=0.5 * (rate_bps[0] + rate_bps[1]),
+        ar1_noise_rate=(rate_bps[1] - rate_bps[0]) / sqrt12 * c,
+        ar1_mu_cap=0.5 * (cap[0] + cap[1]),
+        ar1_noise_cap=(cap[1] - cap[0]) / sqrt12 * c,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,3 +162,55 @@ class MECConfig:
 
     def accuracies(self) -> np.ndarray:
         return np.asarray(self.exit_accuracy, dtype=np.float32)
+
+    def static_signature(self) -> tuple:
+        """Everything that shapes the traced program (not its numbers).
+
+        Two configs with equal signatures compile to the same episode
+        jaxpr; all remaining knobs live in ``scenario_params()`` and ride
+        along as traced data. This is what the sweep packer keys on to
+        batch cells *across* scenarios.
+        """
+        return (self.n_devices, self.n_servers, self.n_exits,
+                self.workload, self.early_exit, self.slot_s)
+
+    def scenario_params(self) -> ScenarioParams:
+        """This config's numeric knobs as a ``ScenarioParams`` pytree.
+
+        Derived fields (AR(1) moments, bit-rate bounds) are computed in
+        float64 and rounded to float32 once — exactly the arithmetic the
+        pre-split code performed on baked Python constants, so threading
+        the result as traced data is bit-identical to baking it in.
+        """
+        f32 = lambda v: jnp.asarray(np.asarray(v, np.float64), jnp.float32)
+        r_lo, r_hi = self.rate_mbps
+        c_lo, c_hi = self.capacity_range
+        rho = float(self.ar1_rho)
+        return ScenarioParams(
+            task_kb=f32(self.task_kbytes),
+            rate_mbps=f32(self.rate_mbps),
+            capacity_range=f32(self.capacity_range),
+            inference_jitter=f32(self.inference_jitter),
+            csi_error=f32(self.csi_error),
+            connectivity_drop=f32(self.connectivity_drop),
+            deadline_s=f32(self.deadline_s),
+            arrival_rate=f32(min(max(float(self.arrival_rate), 0.0), 1.0)),
+            mmpp_rates=f32(self.mmpp_rates),
+            mmpp_switch=f32(self.mmpp_switch),
+            churn_prob=f32(self.churn_prob),
+            ar1_rho=f32(rho),
+            exit_times_s=jnp.asarray(self.exit_times()),
+            exit_acc=jnp.asarray(self.accuracies()),
+            rate_bps=f32((r_lo * 1e6, r_hi * 1e6)),
+            ar1_mu_rate=f32(0.5 * (r_lo * 1e6 + r_hi * 1e6)),
+            # sigma and sqrt(1-rho^2) rounded to f32 *separately*, then
+            # multiplied in f32 — the product XLA's constant reassociation
+            # produced from the pre-split (x * sigma) * c chain
+            ar1_noise_rate=jnp.asarray(
+                np.float32((r_hi * 1e6 - r_lo * 1e6) / np.sqrt(12.0))
+                * np.float32(np.sqrt(max(1.0 - rho ** 2, 0.0)))),
+            ar1_mu_cap=f32(0.5 * (c_lo + c_hi)),
+            ar1_noise_cap=jnp.asarray(
+                np.float32((c_hi - c_lo) / np.sqrt(12.0))
+                * np.float32(np.sqrt(max(1.0 - rho ** 2, 0.0)))),
+        )

@@ -13,17 +13,23 @@ Design notes
   times, observed capacity) and *realized* ones (true rates, ±jitter on
   inference time). ``evaluate()`` scores candidates with estimates;
   ``step()`` realizes the chosen action with ground truth.
+* Scenario-as-data: every numeric scenario knob enters through a
+  ``ScenarioParams`` pytree (``sp``), threaded as a *traced* argument.
+  ``sp=None`` uses ``self.params`` (the knobs of the env's own
+  ``MECConfig``) — same numbers, closed over as constants. Passing a
+  batched ``sp`` under ``vmap`` runs many scenarios through one compiled
+  program (cross-scenario sweep packs, domain-randomized fleets).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.mec.config import MECConfig
+from repro.mec.config import MECConfig, ScenarioParams
 
 
 class MECState(NamedTuple):
@@ -61,7 +67,7 @@ def _arrays(cfg: MECConfig):
             jnp.asarray(cfg.accuracies(), jnp.float32))
 
 
-def assemble_slot(cfg: MECConfig, exit_times: jax.Array, *,
+def assemble_slot(sp: ScenarioParams, m: int, *,
                   rate_true: jax.Array, capacity: jax.Array,
                   active: jax.Array, k_size, k_csi, k_jitter,
                   k_connect) -> SlotTasks:
@@ -71,26 +77,25 @@ def assemble_slot(cfg: MECConfig, exit_times: jax.Array, *,
     (with the never-lose-every-link fallback) live here, shared between
     ``MECEnv.sample_slot`` (iid rates/capacity) and the rollout workload
     generators (AR(1)/arrival-driven), so the draw semantics cannot drift
-    between the two paths.
+    between the two paths. All numeric knobs come from ``sp`` — traced
+    data, so one compiled body serves any scenario of the same shape.
     """
-    m, n = rate_true.shape
-    l = exit_times.shape[-1]
-    kb_lo, kb_hi = cfg.task_kbytes
-    size_bits = jax.random.uniform(k_size, (m,), minval=kb_lo,
-                                   maxval=kb_hi) * 8e3  # KBytes -> bits
-    eps = jax.random.uniform(k_csi, (m, n), minval=-cfg.csi_error,
-                             maxval=cfg.csi_error)
+    n, l = sp.exit_times_s.shape
+    size_bits = jax.random.uniform(k_size, (m,), minval=sp.task_kb[0],
+                                   maxval=sp.task_kb[1]) * 8e3  # KB -> bits
+    eps = jax.random.uniform(k_csi, (m, n), minval=-sp.csi_error,
+                             maxval=sp.csi_error)
     rate_est = rate_true * (1.0 + eps)
-    jit = jax.random.uniform(k_jitter, (n, l), minval=-cfg.inference_jitter,
-                             maxval=cfg.inference_jitter)
-    cmp_base = exit_times / capacity[:, None]
+    jit = jax.random.uniform(k_jitter, (n, l), minval=-sp.inference_jitter,
+                             maxval=sp.inference_jitter)
+    cmp_base = sp.exit_times_s / capacity[:, None]
     cmp_true = cmp_base * (1.0 + jit)
     connect = (jax.random.uniform(k_connect, (m, n))
-               >= cfg.connectivity_drop).astype(jnp.float32)
+               >= sp.connectivity_drop).astype(jnp.float32)
     # never let a device lose every link
     has_link = connect.sum(-1, keepdims=True) > 0
     connect = jnp.where(has_link, connect, jnp.ones_like(connect))
-    deadline = jnp.full((m,), cfg.deadline_s, jnp.float32)
+    deadline = jnp.full((m,), sp.deadline_s, jnp.float32)
     return SlotTasks(size_bits, deadline, rate_true, rate_est, capacity,
                      cmp_true, cmp_base, connect, active)
 
@@ -102,6 +107,12 @@ class MECEnv:
         self.cfg = cfg
         self.exit_times, self.exit_acc = _arrays(cfg)
         self.M, self.N, self.L = cfg.n_devices, cfg.n_servers, cfg.n_exits
+        # Default scenario data: cfg's own knobs. Methods take an optional
+        # ``sp`` override; None closes over these as traced constants.
+        self.params: ScenarioParams = cfg.scenario_params()
+
+    def _sp(self, sp: Optional[ScenarioParams]) -> ScenarioParams:
+        return self.params if sp is None else sp
 
     # ------------------------------------------------------------------ state
     def reset(self) -> MECState:
@@ -113,15 +124,18 @@ class MECEnv:
 
     # ------------------------------------------------------------- task draws
     @functools.partial(jax.jit, static_argnums=0)
-    def sample_slot(self, key: jax.Array) -> SlotTasks:
-        cfg = self.cfg
+    def sample_slot(self, key: jax.Array,
+                    sp: Optional[ScenarioParams] = None) -> SlotTasks:
+        """One slot's iid task draw (paper §VI-A); knobs from ``sp``."""
+        sp = self._sp(sp)
         ks = jax.random.split(key, 7)
-        r_lo, r_hi = cfg.rate_mbps
         rate_true = jax.random.uniform(ks[1], (self.M, self.N),
-                                       minval=r_lo, maxval=r_hi) * 1e6
-        c_lo, c_hi = cfg.capacity_range
-        capacity = jax.random.uniform(ks[3], (self.N,), minval=c_lo, maxval=c_hi)
-        return assemble_slot(cfg, self.exit_times,
+                                       minval=sp.rate_mbps[0],
+                                       maxval=sp.rate_mbps[1]) * 1e6
+        capacity = jax.random.uniform(ks[3], (self.N,),
+                                      minval=sp.capacity_range[0],
+                                      maxval=sp.capacity_range[1])
+        return assemble_slot(sp, self.M,
                              rate_true=rate_true, capacity=capacity,
                              active=jnp.ones((self.M,), jnp.float32),
                              k_size=ks[0], k_csi=ks[2], k_jitter=ks[4],
@@ -129,7 +143,7 @@ class MECEnv:
 
     # ------------------------------------------------------------ core physics
     def _simulate(self, state: MECState, tasks: SlotTasks, decision: jax.Array,
-                  *, realized: bool):
+                  sp: ScenarioParams, *, realized: bool):
         """Run one slot's queueing physics for a decision [M] in [0, N*L).
 
         Returns SlotResult plus the end-of-slot (dev_free, es_free).
@@ -174,12 +188,14 @@ class MECEnv:
         t_wait = jnp.where(act, start_srv - arrival, 0.0)        # Eq (7)
         t_total = t_com + t_wait + t_cmp                          # Eq (8)
 
-        phi = self.exit_acc[l_idx]                                # Eq (5)
+        phi = sp.exit_acc[l_idx]                                  # Eq (5)
         # links that are down make the task infeasible
         link = jnp.take_along_axis(tasks.connect, n_idx[:, None], axis=1)[:, 0]
         t_total = jnp.where(link > 0.5, t_total, jnp.inf)
 
-        psi = 1.0 - jax.nn.sigmoid(5.0 * t_total / tasks.deadline_s)
+        # reciprocal-multiply (not /): matches XLA's divide-by-constant
+        # rewrite, so baked-constant and traced-sp programs agree bitwise
+        psi = 1.0 - jax.nn.sigmoid(5.0 * t_total * (1.0 / tasks.deadline_s))
         psi = jnp.where(jnp.isinf(t_total), 0.0, psi)
         reward = jnp.sum(jnp.where(act, phi * psi, 0.0))          # Eq (9)
         success = act & (t_total <= tasks.deadline_s)             # Eq (11)
@@ -191,30 +207,35 @@ class MECEnv:
     # ------------------------------------------------------------- public API
     @functools.partial(jax.jit, static_argnums=0)
     def evaluate(self, state: MECState, tasks: SlotTasks,
-                 decisions: jax.Array) -> jax.Array:
+                 decisions: jax.Array,
+                 sp: Optional[ScenarioParams] = None) -> jax.Array:
         """Reward Q for a batch of candidate decisions [S, M] (Eq 15 critic).
 
         Uses *estimated* quantities — this is the information the scheduler
         actually has when choosing.
         """
+        sp = self._sp(sp)
+
         def one(d):
-            res, _ = self._simulate(state, tasks, d, realized=False)
+            res, _ = self._simulate(state, tasks, d, sp, realized=False)
             return res.reward
 
         return jax.vmap(one)(decisions)
 
     @functools.partial(jax.jit, static_argnums=0)
-    def step(self, state: MECState, tasks: SlotTasks, decision: jax.Array):
+    def step(self, state: MECState, tasks: SlotTasks, decision: jax.Array,
+             sp: Optional[ScenarioParams] = None):
         """Realize decision [M]; returns (new_state, SlotResult)."""
         result, (dev_free, es_free) = self._simulate(
-            state, tasks, decision, realized=True)
+            state, tasks, decision, self._sp(sp), realized=True)
         new_state = MECState(dev_free=dev_free, es_free=es_free,
                              slot=state.slot + 1)
         return new_state, result
 
     # ------------------------------------------------------------ observation
     @functools.partial(jax.jit, static_argnums=0)
-    def observe(self, state: MECState, tasks: SlotTasks):
+    def observe(self, state: MECState, tasks: SlotTasks,
+                sp: Optional[ScenarioParams] = None):
         """Feature views used by the agents (normalized, estimate-side).
 
         Returns dict with:
@@ -223,24 +244,28 @@ class MECEnv:
           edge_rate [M, N]  — normalized rate estimate per link
           connect [M, N]
         """
-        cfg = self.cfg
+        cfg, sp = self.cfg, self._sp(sp)
         gen_time = state.slot.astype(jnp.float32) * cfg.slot_s
-        d_norm = tasks.size_bits / (cfg.task_kbytes[1] * 8e3)
-        dl_norm = tasks.deadline_s / cfg.deadline_s
-        r_norm = tasks.rate_est / (cfg.rate_mbps[1] * 1e6)
+        # normalizers as reciprocal-multiplies: XLA rewrites x/const into
+        # x*(1/const), so spelling the reciprocal out keeps the traced-sp
+        # program bit-identical to the baked-constant one
+        inv_dl = 1.0 / sp.deadline_s
+        d_norm = tasks.size_bits * (1.0 / (sp.task_kb[1] * 8e3))
+        dl_norm = tasks.deadline_s / sp.deadline_s   # x/x == 1.0 exactly
+        r_norm = tasks.rate_est * (1.0 / (sp.rate_mbps[1] * 1e6))
         r_norm = r_norm * tasks.connect
         # log-compress queue backlogs: under overload they grow to many
         # multiples of the deadline and would otherwise saturate the GCN
         backlog_dev = jnp.log1p(
-            jnp.maximum(state.dev_free - gen_time, 0.0) / cfg.deadline_s)
+            jnp.maximum(state.dev_free - gen_time, 0.0) * inv_dl)
         device = jnp.stack(
             [d_norm, dl_norm, r_norm.mean(-1), r_norm.max(-1), backlog_dev,
              tasks.active], axis=-1)
 
-        cmp_norm = tasks.cmp_est / cfg.deadline_s                 # [N, L]
+        cmp_norm = tasks.cmp_est * inv_dl                         # [N, L]
         backlog_es = jnp.log1p(
-            jnp.maximum(state.es_free - gen_time, 0.0) / cfg.deadline_s)
-        acc = jnp.broadcast_to(self.exit_acc[None, :], (self.N, self.L))
+            jnp.maximum(state.es_free - gen_time, 0.0) * inv_dl)
+        acc = jnp.broadcast_to(sp.exit_acc[None, :], (self.N, self.L))
         option = jnp.stack(
             [cmp_norm,
              acc,

@@ -1,10 +1,29 @@
-"""Named experiment scenarios — one per paper figure (§VI-D)."""
+"""Named experiment scenarios — one per paper figure (§VI-D) — and
+continuous *scenario spaces* over them.
+
+Besides the paper's fixed named scenarios (``SCENARIOS``), this module
+treats a scenario as a point in knob-space (``ScenarioParams``) and
+provides:
+
+* ``scenario_params(name, ...)`` — a named scenario's knobs as a pytree;
+* ``interpolate_params(a, b, t)`` — convex blends between two scenarios
+  (derived AR(1) moments recomputed, never interpolated);
+* ``ScenarioSpace`` / ``scenario_space(...)`` — a box spanned by two
+  corner scenarios, with jit/vmap-pure ``sample``/``sample_batch`` for
+  domain-randomized fleets: pass a ``sample_batch(key, B)`` draw to
+  ``RolloutDriver(..., per_fleet_scenarios=True)`` and every fleet trains
+  under its own dynamics inside one compiled episode.
+"""
 from __future__ import annotations
 
 import dataclasses
 import itertools
 
-from repro.mec.config import MECConfig
+import jax
+import jax.numpy as jnp
+
+from repro.mec.config import (MECConfig, PRIMITIVE_FIELDS, ScenarioParams,
+                              derive_params)
 
 
 def make_scenario(name: str, *, n_devices: int = 14, slot_ms: float = 30.0,
@@ -54,6 +73,97 @@ def scenario_grid(names=None, device_counts=(6, 8, 10, 12, 14),
         for m in device_counts:
             for tau in slot_lengths_ms:
                 yield name, m, tau
+
+
+# --------------------------------------------------------- scenario spaces
+def scenario_params(name: str, **kwargs) -> ScenarioParams:
+    """A named scenario's numeric knobs as a ``ScenarioParams`` pytree.
+
+    ``kwargs`` are forwarded to ``make_scenario`` (``n_devices``,
+    ``slot_ms``, config overrides). The result threads through
+    ``MECEnv``/``RolloutDriver``/sweep packs as traced data.
+    """
+    return make_scenario(name, **kwargs).scenario_params()
+
+
+def interpolate_params(a: ScenarioParams, b: ScenarioParams,
+                       t) -> ScenarioParams:
+    """Convex blend ``(1-t)*a + t*b`` over primitive knobs (jit-pure).
+
+    ``t`` may be a traced scalar. Derived fields (AR(1) moments, bps
+    bounds) are recomputed from the blended primitives — interpolating
+    them directly would decouple them from ``ar1_rho``/the ranges. Exit
+    tables interpolate linearly (both ends must share [N, L] shape).
+    """
+    t = jnp.asarray(t, jnp.float32)
+    prim = {k: (1.0 - t) * getattr(a, k) + t * getattr(b, k)
+            for k in PRIMITIVE_FIELDS}
+    return derive_params(prim,
+                         (1.0 - t) * a.exit_times_s + t * b.exit_times_s,
+                         (1.0 - t) * a.exit_acc + t * b.exit_acc)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpace:
+    """A box in scenario-knob space spanned by two corner pytrees.
+
+    ``sample`` draws every primitive knob independently and uniformly
+    between the corners (structure — exit tables — comes from ``lo``);
+    ``sample_batch`` stacks B independent draws along a leading fleet
+    axis. Both are pure jax functions of the key, so draws compose with
+    ``vmap``/``jit`` and are reproducible. This is the domain-
+    randomization front-end promised by the ROADMAP: train one fleet
+    batch over continuously sampled dynamics instead of the paper's four
+    fixed scenarios.
+    """
+    lo: ScenarioParams
+    hi: ScenarioParams
+
+    # (lo, hi) interval knobs: drawn element-wise then sorted, so corners
+    # with disjoint intervals can never yield an inverted range (which
+    # would silently break the uniform draws and AR(1) moments downstream)
+    _INTERVAL_FIELDS = ("task_kb", "rate_mbps", "capacity_range")
+
+    def sample(self, key: jax.Array) -> ScenarioParams:
+        """One uniform draw from the box -> unbatched ``ScenarioParams``."""
+        keys = jax.random.split(key, len(PRIMITIVE_FIELDS))
+        prim = {}
+        for k, field in zip(keys, PRIMITIVE_FIELDS):
+            lo, hi = getattr(self.lo, field), getattr(self.hi, field)
+            u = jax.random.uniform(k, jnp.shape(lo))
+            v = lo + u * (hi - lo)
+            prim[field] = jnp.sort(v) if field in self._INTERVAL_FIELDS else v
+        return derive_params(prim, self.lo.exit_times_s, self.lo.exit_acc)
+
+    def sample_batch(self, key: jax.Array, n: int) -> ScenarioParams:
+        """[n]-leading stack of independent draws (``fold_in`` per index,
+        so draw i is independent of n — growing the fleet never perturbs
+        existing fleets, matching ``VecMECEnv.fleet_keys``)."""
+        return jax.vmap(lambda i: self.sample(jax.random.fold_in(key, i)))(
+            jnp.arange(n))
+
+
+def scenario_space(lo: str = "fig5_baseline", hi: str = "fig8_csi",
+                   **kwargs) -> ScenarioSpace:
+    """Space spanned by two *named* scenarios (same structural shape).
+
+    ``kwargs`` go to ``make_scenario`` for both corners (``n_devices``,
+    ``slot_ms``, overrides). Example — randomize capacity/jitter/CSI over
+    the whole fig5->fig8 span::
+
+        space = scenario_space("fig5_baseline", "fig8_csi", n_devices=8)
+        sp = space.sample_batch(key, n_fleets)     # [B]-leading pytree
+        driver = RolloutDriver(agent, n_fleets=n_fleets,
+                               per_fleet_scenarios=True)
+        carry, trace = driver.run(key, n_slots, sp=sp)
+    """
+    a = make_scenario(lo, **kwargs)
+    b = make_scenario(hi, **kwargs)
+    if a.static_signature() != b.static_signature():
+        raise ValueError(
+            f"corner scenarios differ structurally: {a.static_signature()}"
+            f" vs {b.static_signature()}; a space needs one compiled shape")
+    return ScenarioSpace(lo=a.scenario_params(), hi=b.scenario_params())
 
 
 def expand_grid(names=None, **axes):

@@ -65,12 +65,28 @@ class RolloutTrace(NamedTuple):
 
 
 class RolloutDriver:
+    """Drives B fleets of one agent for T slots in one compiled episode.
+
+    Axis conventions: the fleet axis [B] leads every batched carry leaf;
+    traces add a time axis [T] in front ([T, B, ...]). Scenario knobs
+    enter as an optional ``ScenarioParams`` pytree ``sp`` on
+    ``run``/``init_carry`` — traced data, shared by all fleets by
+    default. With ``per_fleet_scenarios=True``, ``sp`` leaves carry a
+    leading [B] axis and each fleet runs its own dynamics (domain
+    randomization over ``mec.scenarios.ScenarioSpace`` draws); the sweep
+    runner instead vmaps a per-cell ``sp`` over the whole slot body.
+    """
+
     def __init__(self, agent: OffloadingAgent, *, n_fleets: int = 1,
                  workload: Optional[WorkloadGen] = None, train: bool = True,
                  replay_capacity: Optional[int] = None,
                  batch_size: Optional[int] = None,
-                 train_every: Optional[int] = None):
+                 train_every: Optional[int] = None,
+                 per_fleet_scenarios: bool = False):
         self.agent = agent
+        # vmap axis for ScenarioParams inside the slot body: None shares
+        # one scenario across fleets, 0 maps a [B]-leading pytree
+        self._sp_axis = 0 if per_fleet_scenarios else None
         self.env = agent.env
         self.vec = VecMECEnv(self.env, n_fleets)
         self.workload = workload or make_workload(self.env)
@@ -100,15 +116,20 @@ class RolloutDriver:
 
     # ------------------------------------------------------------------ carry
     def init_carry(self, key: jax.Array, *, params=None,
-                   opt_state=None) -> RolloutCarry:
+                   opt_state=None, sp=None) -> RolloutCarry:
         """Fresh episode state; fleet streams are fold_in(key_i, fleet).
 
         ``params``/``opt_state`` default to the interactive agent's but can
         be supplied explicitly — the sweep packer vmaps this over per-cell
-        (key, params, opt_state) triples (every op here is vmappable).
+        (key, params, opt_state, sp) tuples (every op here is vmappable).
+        ``sp`` seeds the workload state's rate/capacity marginals; None
+        uses the env config's own knobs.
         """
         k_task, k_dec, k_train, k_wl = jax.random.split(key, 4)
-        wl_state = jax.vmap(self.workload.init)(self.vec.fleet_keys(k_wl))
+        wl_state = jax.vmap(self.workload.init,
+                            in_axes=(0, self._sp_axis if sp is not None
+                                     else None))(
+            self.vec.fleet_keys(k_wl), sp)
         return RolloutCarry(
             env_state=self.vec.reset(),
             wl_state=wl_state,
@@ -124,24 +145,27 @@ class RolloutDriver:
         )
 
     # ------------------------------------------------------------- slot body
-    def _slot(self, carry: RolloutCarry, exit_mask=None):
+    def _slot(self, carry: RolloutCarry, exit_mask=None, sp=None):
         """One slot for all fleets. ``exit_mask=None`` uses the agent's own
-        mask; the sweep packer passes a per-cell mask (vmapped)."""
+        mask; the sweep packer passes a per-cell mask (vmapped). ``sp`` is
+        the slot's ScenarioParams — per-fleet ([B]-leading) when the driver
+        was built with ``per_fleet_scenarios=True``, else shared."""
         task_keys, task_subs = VecMECEnv.split_keys(carry.task_keys)
         dec_keys, dec_subs = VecMECEnv.split_keys(carry.dec_keys)
         params, opt_state = carry.params, carry.opt_state
 
-        def fleet(env_state, wl_state, tk, dk):
-            wl_state, tasks = self.workload.sample(wl_state, tk)
+        def fleet(env_state, wl_state, tk, dk, s):
+            wl_state, tasks = self.workload.sample(wl_state, tk, s)
             decision, q_best, g = self.agent._decide(
-                params, env_state, tasks, dk, exit_mask)
-            new_state, result = self.env.step(env_state, tasks, decision)
+                params, env_state, tasks, dk, exit_mask, s)
+            new_state, result = self.env.step(env_state, tasks, decision, s)
             return wl_state, new_state, g, decision, result, q_best, \
                 tasks.active
 
+        sp_axis = self._sp_axis if sp is not None else None
         (wl_state, env_state, graphs, decisions, results, q_best,
-         active) = jax.vmap(fleet)(carry.env_state, carry.wl_state,
-                                   task_subs, dec_subs)
+         active) = jax.vmap(fleet, in_axes=(0, 0, 0, 0, sp_axis))(
+            carry.env_state, carry.wl_state, task_subs, dec_subs, sp)
 
         replay, train_key = carry.replay, carry.train_key
         loss = jnp.full((), jnp.nan, jnp.float32)
@@ -184,25 +208,31 @@ class RolloutDriver:
         return new_carry, out
 
     # -------------------------------------------------------------- episodes
-    def run(self, key: jax.Array, n_slots: int, *, mode: str = "scan"):
+    def run(self, key: jax.Array, n_slots: int, *, mode: str = "scan",
+            sp=None):
         """Roll B fleets for ``n_slots``; returns (final carry, trace).
 
         ``mode="scan"`` compiles the whole episode; ``mode="loop"`` runs the
         identical slot body per-slot from Python (reference/debug path).
+        ``sp`` overrides the env config's scenario knobs as traced data —
+        pass a [B]-leading pytree (with ``per_fleet_scenarios=True``) for
+        domain-randomized fleets; swapping ``sp`` values between calls
+        never recompiles.
         """
-        carry = self.init_carry(key)
+        carry = self.init_carry(key, sp=sp)
         if mode == "scan":
-            return self._run_scan(carry, n_slots)
+            return self._run_scan(carry, n_slots, sp=sp)
         if mode == "loop":
             outs = []
             for _ in range(n_slots):
-                carry, out = self._jit_slot(carry)
+                carry, out = self._jit_slot(carry, None, sp)
                 outs.append(out)
             trace = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
             return carry, trace
         raise ValueError(f"unknown mode {mode!r}")
 
-    def run_sharded(self, key: jax.Array, n_slots: int, *, mesh=None):
+    def run_sharded(self, key: jax.Array, n_slots: int, *, mesh=None,
+                    sp=None):
         """Scan-fused episode with the fleet axis sharded across devices.
 
         Fleet-batched carry leaves (env/workload state, per-fleet RNG
@@ -216,12 +246,12 @@ class RolloutDriver:
         """
         from repro.sharding.fleet import replicate, shard_leading_axis
         if mesh is None:
-            return self.run(key, n_slots, mode="scan")
+            return self.run(key, n_slots, mode="scan", sp=sp)
         if self.n_fleets % mesh.devices.size != 0:
             raise ValueError(
                 f"n_fleets={self.n_fleets} not divisible by "
                 f"{mesh.devices.size} devices")
-        carry = self.init_carry(key)
+        carry = self.init_carry(key, sp=sp)
         batched = dict(env_state=carry.env_state, wl_state=carry.wl_state,
                        task_keys=carry.task_keys, dec_keys=carry.dec_keys)
         batched = shard_leading_axis(batched, mesh)
@@ -230,17 +260,21 @@ class RolloutDriver:
                  opt_state=carry.opt_state, replay=carry.replay,
                  step=carry.step, metrics=carry.metrics), mesh)
         carry = RolloutCarry(**batched, **rest)
-        return self._run_scan(carry, n_slots)
+        # per-fleet scenarios ride the fleet axis; a shared sp replicates
+        if sp is not None:
+            sp = (shard_leading_axis(sp, mesh) if self._sp_axis == 0
+                  else replicate(sp, mesh))
+        return self._run_scan(carry, n_slots, sp=sp)
 
-    def _run_scan(self, carry: RolloutCarry, n_slots: int):
+    def _run_scan(self, carry: RolloutCarry, n_slots: int, *, sp=None):
         fn = self._scan_cache.get(n_slots)
         if fn is None:
-            def episode(c):
-                return jax.lax.scan(lambda c_, _: self._slot(c_), c, None,
-                                    length=n_slots)
+            def episode(c, s):
+                return jax.lax.scan(lambda c_, _: self._slot(c_, None, s),
+                                    c, None, length=n_slots)
             fn = jax.jit(episode)
             self._scan_cache[n_slots] = fn
-        return fn(carry)
+        return fn(carry, sp)
 
     def sync_agent(self, carry: RolloutCarry) -> None:
         """Write learned params/optimizer back into the interactive agent."""
@@ -254,7 +288,10 @@ def carry_metrics(carry: RolloutCarry, *, slot_s: float,
 
     Streaming counterpart of ``trace_metrics`` — agrees with it on shared
     keys up to float32 summation order (tested), while transferring eight
-    scalars instead of the full trace.
+    scalars instead of the full trace. ``slot_s`` is seconds; returned
+    ``ssp``/``avg_accuracy``/``deadline_miss`` are fractions in [0, 1]
+    pooled over all fleets, ``throughput_tps`` successful tasks per
+    second per fleet.
     """
     from repro.rollout.metrics import metrics_finalize
     out = {k: float(v) for k, v in metrics_finalize(
@@ -267,7 +304,8 @@ def carry_metrics(carry: RolloutCarry, *, slot_s: float,
 
 
 def trace_metrics(trace: RolloutTrace, *, slot_s: float) -> dict:
-    """Aggregate a trace into the paper's §VI-D metrics (all fleets pooled)."""
+    """Aggregate a [T, B, ...] trace into the paper's §VI-D metrics (all
+    fleets pooled; ``slot_s`` seconds, ``throughput_tps`` per fleet)."""
     active = np.asarray(trace.active) > 0.5
     success = np.asarray(trace.success) & active
     acc = np.asarray(trace.accuracy)

@@ -13,10 +13,12 @@ B never perturbs existing fleets (batch-independence, tested).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.mec.config import ScenarioParams
 from repro.mec.env import MECEnv, MECState, SlotTasks
 
 
@@ -50,22 +52,32 @@ class VecMECEnv:
             lambda x: jnp.broadcast_to(x, (self.n_fleets,) + x.shape), base)
 
     # --------------------------------------------------------------- dynamics
+    # ``sp`` is one shared ScenarioParams for all B fleets (in_axes=None);
+    # per-fleet scenarios are handled one level up, in RolloutDriver's slot
+    # body, where the fleet vmap covers workload + env together.
     @functools.partial(jax.jit, static_argnums=0)
-    def sample_slot(self, keys: jax.Array) -> SlotTasks:
+    def sample_slot(self, keys: jax.Array,
+                    sp: Optional[ScenarioParams] = None) -> SlotTasks:
         """[B] keys -> batched SlotTasks."""
-        return jax.vmap(self.env.sample_slot)(keys)
+        return jax.vmap(self.env.sample_slot, in_axes=(0, None))(keys, sp)
 
     @functools.partial(jax.jit, static_argnums=0)
-    def observe(self, states: MECState, tasks: SlotTasks):
-        return jax.vmap(self.env.observe)(states, tasks)
+    def observe(self, states: MECState, tasks: SlotTasks,
+                sp: Optional[ScenarioParams] = None):
+        return jax.vmap(self.env.observe, in_axes=(0, 0, None))(
+            states, tasks, sp)
 
     @functools.partial(jax.jit, static_argnums=0)
     def evaluate(self, states: MECState, tasks: SlotTasks,
-                 decisions: jax.Array) -> jax.Array:
+                 decisions: jax.Array,
+                 sp: Optional[ScenarioParams] = None) -> jax.Array:
         """Per-fleet critic: decisions [B, S, M] -> Q [B, S]."""
-        return jax.vmap(self.env.evaluate)(states, tasks, decisions)
+        return jax.vmap(self.env.evaluate, in_axes=(0, 0, 0, None))(
+            states, tasks, decisions, sp)
 
     @functools.partial(jax.jit, static_argnums=0)
-    def step(self, states: MECState, tasks: SlotTasks, decisions: jax.Array):
+    def step(self, states: MECState, tasks: SlotTasks, decisions: jax.Array,
+             sp: Optional[ScenarioParams] = None):
         """Realize per-fleet decisions [B, M] -> (new states, SlotResults)."""
-        return jax.vmap(self.env.step)(states, tasks, decisions)
+        return jax.vmap(self.env.step, in_axes=(0, 0, 0, None))(
+            states, tasks, decisions, sp)

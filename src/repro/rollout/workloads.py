@@ -10,32 +10,41 @@ so they compose with ``vmap`` (fleets) and ``lax.scan`` (episodes):
     wl  = gen.init(key)
     wl, tasks = gen.sample(wl, key_k)      # one slot
 
-Three arrival processes, selected by ``MECConfig.workload``:
+Three arrival processes, selected by ``MECConfig.workload`` (a *static*
+branch — the workload family is part of the compiled program's shape):
 
 * ``iid``     — delegates to ``MECEnv.sample_slot`` bit-for-bit, so legacy
   per-slot loops and the scan driver agree exactly.
 * ``poisson`` — Bernoulli thinning of a Poisson process: each member device
-  generates a task with probability ``cfg.arrival_rate`` per slot.
+  generates a task with probability ``arrival_rate`` per slot.
 * ``mmpp``    — two-state Markov-modulated Poisson process: a global
-  calm/burst mode switches with ``cfg.mmpp_switch`` and modulates the
-  per-device arrival probability between ``cfg.mmpp_rates``.
+  calm/burst mode switches with ``mmpp_switch`` and modulates the
+  per-device arrival probability between ``mmpp_rates``.
 
 Orthogonal dynamics applied on top of ``poisson``/``mmpp``:
 
-* device churn  — members leave/join the fleet w.p. ``cfg.churn_prob``/slot;
-* AR(1) rates   — uplink rates and ES capacity follow a mean-reverting
-  Gaussian AR(1) with coefficient ``cfg.ar1_rho`` (variance matched to the
-  iid uniform draw), clipped to the configured ranges.
+* device churn  — members leave/join the fleet w.p. ``churn_prob``/slot;
+* AR(1) rates   — uplink rates (bps) and ES capacity follow a
+  mean-reverting Gaussian AR(1) with coefficient ``ar1_rho`` (variance
+  matched to the iid uniform draw), clipped to the configured ranges.
+
+Every numeric knob above is read from a ``ScenarioParams`` pytree (``sp``),
+threaded as *traced* data — ``sp=None`` uses the env config's own knobs.
+Churn and AR(1) are branch-free (`where`-selected), so one compiled
+generator serves any mix of scenarios: a batched ``sp`` under ``vmap``
+runs, say, a churning Poisson fleet next to an AR(1) Markov-channel fleet
+in the same program. All axis conventions here are single-fleet —
+``RolloutDriver`` adds the fleet axis [B] by ``vmap``, the sweep runner
+adds the cell axis [C] outside that.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.mec.config import MECConfig
+from repro.mec.config import MECConfig, ScenarioParams
 from repro.mec.env import MECEnv, SlotTasks, assemble_slot
 
 
@@ -59,15 +68,18 @@ class WorkloadGen:
         self.kind = cfg.workload
 
     # ------------------------------------------------------------------ init
-    def init(self, key: jax.Array) -> WorkloadState:
-        cfg, M, N = self.cfg, self.env.M, self.env.N
+    def init(self, key: jax.Array,
+             sp: Optional[ScenarioParams] = None) -> WorkloadState:
+        """Stationary initial state; ranges from ``sp`` (Mbps, fraction)."""
+        sp = self.env._sp(sp)
+        M, N = self.env.M, self.env.N
         kr, kc = jax.random.split(key)
-        r_lo, r_hi = cfg.rate_mbps
-        c_lo, c_hi = cfg.capacity_range
         # start from the stationary (uniform) marginals so short rollouts
         # are not biased by a burn-in transient
-        rate = jax.random.uniform(kr, (M, N), minval=r_lo, maxval=r_hi) * 1e6
-        cap = jax.random.uniform(kc, (N,), minval=c_lo, maxval=c_hi)
+        rate = jax.random.uniform(kr, (M, N), minval=sp.rate_mbps[0],
+                                  maxval=sp.rate_mbps[1]) * 1e6
+        cap = jax.random.uniform(kc, (N,), minval=sp.capacity_range[0],
+                                 maxval=sp.capacity_range[1])
         return WorkloadState(
             rate_true=rate.astype(jnp.float32),
             capacity=cap.astype(jnp.float32),
@@ -76,67 +88,73 @@ class WorkloadGen:
         )
 
     # ---------------------------------------------------------------- sample
-    def sample(self, state: WorkloadState, key: jax.Array):
+    def sample(self, state: WorkloadState, key: jax.Array,
+               sp: Optional[ScenarioParams] = None):
         """Draw one slot -> (new state, SlotTasks)."""
         if self.kind == "iid":
-            return state, self.env.sample_slot(key)
+            return state, self.env.sample_slot(key, sp)
 
-        cfg, env = self.cfg, self.env
-        M, N, L = env.M, env.N, env.L
+        env = self.env
+        sp = env._sp(sp)
+        M = env.M
         ks = jax.random.split(key, 9)
 
         # --- arrival process -> active mask
         if self.kind == "poisson":
             burst = state.burst
-            p_arr = jnp.float32(min(max(cfg.arrival_rate, 0.0), 1.0))
+            p_arr = jnp.clip(sp.arrival_rate, 0.0, 1.0)
         else:  # mmpp
-            p_cb, p_bc = cfg.mmpp_switch
             u = jax.random.uniform(ks[0])
-            flip = jnp.where(state.burst == 0, u < p_cb, u < p_bc)
+            flip = jnp.where(state.burst == 0, u < sp.mmpp_switch[0],
+                             u < sp.mmpp_switch[1])
             burst = jnp.where(flip, 1 - state.burst, state.burst)
-            p_arr = jnp.where(burst == 0, cfg.mmpp_rates[0], cfg.mmpp_rates[1])
+            p_arr = jnp.where(burst == 0, sp.mmpp_rates[0], sp.mmpp_rates[1])
         arrive = jax.random.bernoulli(ks[1], p_arr, (M,))
 
-        # --- device churn
-        if cfg.churn_prob > 0:
-            toggle = jax.random.bernoulli(ks[2], cfg.churn_prob, (M,))
-            member = jnp.where(toggle, 1.0 - state.member, state.member)
-        else:
-            member = state.member
+        # --- device churn (branch-free: churn_prob=0 draws a never-firing
+        # toggle, leaving ``member`` bit-identical to the no-churn path)
+        toggle = jax.random.bernoulli(ks[2], jnp.clip(sp.churn_prob, 0.0, 1.0),
+                                      (M,))
+        member = jnp.where(toggle, 1.0 - state.member, state.member)
         active = arrive.astype(jnp.float32) * member
 
-        # --- time-correlated channel/capacity (AR(1) when configured,
+        # --- time-correlated channel/capacity (AR(1) when ar1_rho > 0,
         # else fresh uniform as in sample_slot)
-        r_lo, r_hi = cfg.rate_mbps
-        rate_true = self._ar1(ks[3], state.rate_true, (M, N),
-                              lo=r_lo * 1e6, hi=r_hi * 1e6)
-        c_lo, c_hi = cfg.capacity_range
-        capacity = self._ar1(ks[5], state.capacity, (N,), lo=c_lo, hi=c_hi)
+        rate_true = _ar1(ks[3], state.rate_true, (M, env.N),
+                         lo=sp.rate_bps[0], hi=sp.rate_bps[1],
+                         mu=sp.ar1_mu_rate, noise_scale=sp.ar1_noise_rate,
+                         rho=sp.ar1_rho)
+        capacity = _ar1(ks[5], state.capacity, (env.N,),
+                        lo=sp.capacity_range[0], hi=sp.capacity_range[1],
+                        mu=sp.ar1_mu_cap, noise_scale=sp.ar1_noise_cap,
+                        rho=sp.ar1_rho)
 
         new_state = WorkloadState(rate_true=rate_true, capacity=capacity,
                                   member=member, burst=burst)
         # sizes / CSI estimates / jitter / connectivity share sample_slot's
         # draw semantics via assemble_slot
-        tasks = assemble_slot(cfg, env.exit_times,
+        tasks = assemble_slot(sp, M,
                               rate_true=rate_true, capacity=capacity,
                               active=active, k_size=ks[7], k_csi=ks[4],
                               k_jitter=ks[6], k_connect=ks[8])
         return new_state, tasks
 
-    # ----------------------------------------------------------------- utils
-    def _ar1(self, key, prev, shape, *, lo, hi):
-        """Mean-reverting AR(1) step clipped to [lo, hi].
 
-        The innovation variance is chosen so the stationary variance matches
-        the iid uniform draw on [lo, hi] (sigma^2 = (hi-lo)^2 / 12).
-        """
-        rho = self.cfg.ar1_rho
-        if rho <= 0:
-            return jax.random.uniform(key, shape, minval=lo, maxval=hi)
-        mu = 0.5 * (lo + hi)
-        sigma = (hi - lo) / np.sqrt(12.0)
-        noise = jax.random.normal(key, shape) * sigma * np.sqrt(1.0 - rho**2)
-        return jnp.clip(mu + rho * (prev - mu) + noise, lo, hi)
+def _ar1(key, prev, shape, *, lo, hi, mu, noise_scale, rho):
+    """Mean-reverting AR(1) step clipped to [lo, hi] — branch-free.
+
+    ``mu`` is the stationary mean and ``noise_scale`` the precomputed
+    innovation std ``sigma * sqrt(1 - rho^2)`` with ``sigma`` matched to
+    the iid uniform draw on [lo, hi] (sigma^2 = (hi-lo)^2 / 12) — see
+    ``ScenarioParams``. Both the AR(1) step and the fresh uniform draw
+    consume the same key; ``rho > 0`` selects between them, so rho=0
+    scenarios reproduce the uniform path bit-for-bit while sharing the
+    compiled body with correlated ones.
+    """
+    fresh = jax.random.uniform(key, shape, minval=lo, maxval=hi)
+    noise = jax.random.normal(key, shape) * noise_scale
+    stepped = jnp.clip(mu + rho * (prev - mu) + noise, lo, hi)
+    return jnp.where(rho > 0, stepped, fresh)
 
 
 def make_workload(env: MECEnv) -> WorkloadGen:

@@ -28,8 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.agent import make_agent
-from repro.mec.config import MECConfig
+from repro.mec.config import MECConfig, ScenarioParams
 from repro.mec.env import MECEnv
+from repro.mec.scenarios import SCENARIOS
 from repro.mec.metrics import RunningMetrics
 from repro.mec.profiles import llm_exit_profile
 from repro.models.config import ArchConfig
@@ -56,7 +57,17 @@ class EdgeServingEngine:
     def __init__(self, cfg: ArchConfig, replicas: list[Replica], *,
                  key=None, cache_len: int = 256, scheduler: str = "grle",
                  batch_slots: int = 4, seed: int = 0,
-                 workload: str = "iid", arrival_rate: float = 0.7):
+                 workload: Optional[str] = None,
+                 arrival_rate: Optional[float] = None,
+                 scenario: Optional[str] = None):
+        """``scenario`` names a ``repro.mec.SCENARIOS`` entry whose dynamic
+        knobs (capacity range, jitter, CSI error, workload process, ...)
+        overlay the engine's MEC world model — exit tables and shape stay
+        the engine's own, and explicitly passed ``workload=``/
+        ``arrival_rate=`` always win over the scenario's. Numeric knobs
+        can also be hot-swapped later via ``set_scenario_params`` without
+        recompiling. Defaults without a scenario: ``workload="iid"``,
+        ``arrival_rate=0.7``."""
         key = key if key is not None else jax.random.PRNGKey(seed)
         self.cfg = cfg
         self.model = model_for(cfg)
@@ -78,16 +89,36 @@ class EdgeServingEngine:
         # over 20–100 Mbps) plus a few compute slots — same regime as the
         # paper's 30 ms budget.
         deadline = max(20e-3, float(times.max()) * 6)
+        mec_kwargs = dict(
+            task_kbytes=(4.0, 16.0), rate_mbps=(20.0, 100.0),
+            capacity_range=(0.5, 1.0),
+        )
+        if scenario is not None:
+            # scenario dynamics overlay the defaults; structural fields
+            # stay the engine's (its exit tables ARE the Table-I analogue)
+            overlay = dict(SCENARIOS[scenario])
+            for k in ("n_devices", "n_servers", "exit_times_s",
+                      "exit_accuracy", "slot_s", "deadline_s"):
+                overlay.pop(k, None)
+            mec_kwargs.update(overlay)
+        # explicit constructor args beat the scenario's arrival process
+        if workload is not None:
+            mec_kwargs["workload"] = workload
+        if arrival_rate is not None:
+            mec_kwargs["arrival_rate"] = arrival_rate
+        mec_kwargs.setdefault("workload", "iid")
+        mec_kwargs.setdefault("arrival_rate", 0.7)
         mec_cfg = MECConfig(
             n_devices=batch_slots, n_servers=len(replicas),
             exit_times_s=tuple(map(tuple, times.tolist())),
             exit_accuracy=tuple(quality.tolist()),
             slot_s=deadline / 2, deadline_s=deadline,
-            task_kbytes=(4.0, 16.0), rate_mbps=(20.0, 100.0),
-            capacity_range=(0.5, 1.0),
-            workload=workload, arrival_rate=arrival_rate,
+            **mec_kwargs,
         )
         self.env = MECEnv(mec_cfg)
+        # live scenario knobs: None -> the config's own; see
+        # set_scenario_params for recompile-free swaps
+        self._sp = None
         self.mec_state = self.env.reset()
         # arrival process: with workload != "iid" the generator's ``active``
         # mask decides which batch slots carry a request each slot
@@ -130,6 +161,22 @@ class EdgeServingEngine:
         return outs
 
     # -------------------------------------------------------------- serving
+    def set_scenario_params(self, sp: Optional[ScenarioParams]) -> None:
+        """Hot-swap the MEC world model's numeric dynamics.
+
+        ``sp`` is traced data in every compiled step, so switching
+        scenarios mid-serving (say calm -> burst capacity regimes, or a
+        ``ScenarioSpace`` draw) never triggers recompilation. ``None``
+        restores the engine config's own knobs. Exit tables inside ``sp``
+        must keep the engine's [N, L] shape.
+        """
+        if sp is not None:
+            want = self.env.params.exit_times_s.shape
+            got = jnp.shape(sp.exit_times_s)
+            if got != want:
+                raise ValueError(f"exit table shape {got} != engine {want}")
+        self._sp = sp
+
     def make_request(self, prompt_len: int = 8, max_new: int = 8) -> Request:
         """Synthetic request for arrival-driven serving."""
         toks = self._req_rng.integers(0, self.cfg.vocab, prompt_len)
@@ -148,7 +195,8 @@ class EdgeServingEngine:
         one ``(replica, exit_layer)`` per request.
         """
         self._key, sk = jax.random.split(self._key)
-        self._wl_state, tasks = self._workload.sample(self._wl_state, sk)
+        self._wl_state, tasks = self._workload.sample(self._wl_state, sk,
+                                                      self._sp)
         if requests is None:
             active = np.flatnonzero(np.asarray(tasks.active) > 0.5)
             slot_ids = [int(i) for i in active]
@@ -164,13 +212,14 @@ class EdgeServingEngine:
                 act[: len(requests)] = 1.0
                 tasks = tasks._replace(active=jnp.asarray(act))
         if self.agent is not None:
-            decision, _ = self.agent.act(self.mec_state, tasks)
+            decision, _ = self.agent.act(self.mec_state, tasks, sp=self._sp)
         else:  # static: final exit, round-robin replica
             L = self.env.L
             decision = jnp.asarray(
                 [(i % self.env.N) * L + (L - 1)
                  for i in range(self.batch_slots)], jnp.int32)
-        self.mec_state, result = self.env.step(self.mec_state, tasks, decision)
+        self.mec_state, result = self.env.step(self.mec_state, tasks, decision,
+                                               self._sp)
         self.metrics.update(result, tasks.active)
 
         decision = np.asarray(decision)

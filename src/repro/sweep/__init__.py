@@ -7,14 +7,22 @@ hand-running one cell at a time. Five layers:
 
   spec    — declarative grid (scenarios x methods x seeds + overrides)
             expanded into hashed Cells
-  packer  — groups same-shape cells (one scenario, one actor family)
-            into mega-batches that vmap over the cell axis
+  packer  — groups same-shape cells into mega-batches that vmap over the
+            cell axis [C]; scenarios are data (ScenarioParams), so cells
+            pack *across* scenarios and a whole 4-method x S-seed x
+            K-scenario grid is one pack per actor family — 2 compiles
   runner  — executes packs through RolloutDriver's scan-fused slot body,
             cell axis sharded across devices (single device -> plain vmap)
   store   — resumable on-disk results keyed by cell hash; finished cells
             are never recomputed or rewritten
   report  — per-scenario aggregation over seeds + GRLE-vs-baseline
             ratios in the style of the paper's Fig 5-8 / Table VI
+
+Axis/unit conventions: the cell axis [C] leads every packed pytree; each
+cell internally batches fleets [B] (RolloutDriver) over devices [M] and
+servers [N]. `slot_ms` is milliseconds; everything inside the simulator
+is seconds/bits/bps; result rows report fractions (ssp, accuracies) and
+tasks-per-second (`throughput_tps`, per fleet).
 """
 from repro.sweep.spec import Cell, SweepSpec, cell_keys
 from repro.sweep.packer import Pack, pack_cells

@@ -1,55 +1,85 @@
-"""Pack same-shape cells into vmappable mega-batches.
+"""Pack same-shape cells into vmappable mega-batches — across scenarios.
 
-Two cells can share one compiled episode iff their traced constants and
-pytree structures agree: the MEC network shape and scenario constants
-(baked into the env trace) and the actor param structure (gcn vs mlp).
-Everything else — seed streams, exit masks (GRLE vs GRL, DROOE vs DROO),
-params — is data, batched over a leading cell axis.
+Two cells can share one compiled episode iff their traced *structure*
+agrees: the MEC network shape (device/server/exit counts), the workload
+family and slot length (``MECConfig.static_signature()``), the actor
+param structure (gcn vs mlp), and the run shape (slots, fleets, replay,
+batch, cadence). Everything numeric — scenario knobs (``ScenarioParams``),
+seed streams, exit masks (GRLE vs GRL, DROOE vs DROO), params — is data,
+batched over a leading cell axis [C].
 
-So the pack key is (scenario, actor family, run shape): a standard
-4-method x S-seed sweep packs into 2 mega-batches of 2*S cells per
-scenario, each compiled once and executed in a single scan with the cell
-axis sharded across devices by the runner.
+So the pack key is (actor family, static/shape signature) only: a full
+4-method x S-seed x K-scenario grid packs into **2** mega-batches total
+(one per actor family, 2·S·K cells each) — 2 compiles instead of 2·K —
+with each cell's ``ScenarioParams`` stacked along the cell axis by the
+runner. Scenarios that change structure (different ``n_devices``,
+``workload`` family, slot length) still split, as they must.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Tuple
 
 from repro.core.agent import actor_family
+from repro.mec.scenarios import make_scenario
 from repro.sweep.spec import Cell
 
 
 class Pack(NamedTuple):
-    """Cells that execute together in one vmapped episode."""
-    scenario: str
+    """Cells that execute together in one vmapped episode.
+
+    ``cells`` is the cell axis, in deterministic (scenario, method, seed)
+    order — the runner stacks per-cell data (keys, params, exit masks,
+    ``ScenarioParams``) along axis 0 in exactly this order.
+    """
     family: str              # "gcn" | "mlp"
     cells: Tuple[Cell, ...]
 
+    @property
+    def scenarios(self) -> Tuple[str, ...]:
+        """Distinct member scenarios, in first-appearance order."""
+        return tuple(dict.fromkeys(c.scenario for c in self.cells))
+
     def label(self) -> str:
-        return f"{self.scenario}/{self.family}[{len(self.cells)}]"
+        names = self.scenarios
+        shown = "+".join(names[:3]) + ("+…" if len(names) > 3 else "")
+        return f"{shown}/{self.family}[{len(self.cells)}]"
 
 
 def _shape_sig(cell: Cell):
-    """Everything that must match for cells to share a compiled episode."""
-    return (cell.scenario, actor_family(cell.method), cell.n_devices,
-            cell.slot_ms, cell.n_slots, cell.n_fleets, cell.replay_capacity,
-            cell.batch_size, cell.train_every, cell.overrides)
+    """Everything that must match for cells to share a compiled episode.
+
+    Combines the run shape (cell fields) with the scenario's static
+    structure (``MECConfig.static_signature()``: counts, workload family,
+    early-exit flag, slot length) — numeric knobs are deliberately absent,
+    they travel as ``ScenarioParams`` data.
+    """
+    cfg = make_scenario(cell.scenario, n_devices=cell.n_devices,
+                        slot_ms=cell.slot_ms, **dict(cell.overrides))
+    return (actor_family(cell.method), cell.n_slots, cell.n_fleets,
+            cell.replay_capacity, cell.batch_size, cell.train_every,
+            cfg.static_signature())
 
 
-def pack_cells(cells) -> list:
+def pack_cells(cells, *, split_scenarios: bool = False) -> list:
     """Group cells by shape signature, preserving deterministic order.
 
     Pack membership depends only on the full grid — never on which cells
     already have stored results — so a resumed sweep re-packs identically
     and recomputed cells see the exact same vmapped batch (bitwise-stable
-    resume).
+    resume). ``split_scenarios=True`` restores the pre-scenario-as-data
+    grouping (one pack per scenario per family) — the baseline measured
+    by ``benchmarks/sweep_throughput.py --mixed``.
     """
     groups: dict = {}
     for cell in cells:
-        groups.setdefault(_shape_sig(cell), []).append(cell)
+        sig = _shape_sig(cell)
+        if split_scenarios:
+            sig = (cell.scenario,) + sig
+        groups.setdefault(sig, []).append(cell)
     packs = []
     for sig in sorted(groups, key=str):
-        members = sorted(groups[sig], key=lambda c: (c.method, c.seed))
-        packs.append(Pack(scenario=sig[0], family=sig[1],
+        members = sorted(groups[sig], key=lambda c: (c.scenario, c.method,
+                                                     c.seed))
+        packs.append(Pack(family=actor_family(members[0].method),
                           cells=tuple(members)))
     return packs

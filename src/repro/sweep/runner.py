@@ -1,18 +1,22 @@
 """Execute sweep cells: packed + sharded by default, per-cell as reference.
 
 ``run_pack`` is the mega-batch path: one template env/agent/driver per
-pack (the traced constants), per-cell params / exit masks / RNG streams
-as batched data, the whole episode vmapped over the cell axis inside one
-``lax.scan`` and the cell axis sharded over available devices
-(``sharding.fleet``; a 1-device host runs the identical program without
-the placement). Per-cell metrics come from the driver's device-resident
-accumulator, so the only host transfer is a handful of scalars per cell
-at the very end.
+pack (the traced structure), per-cell params / exit masks / RNG streams /
+``ScenarioParams`` as batched data along the leading cell axis [C], the
+whole episode vmapped over that axis inside one ``lax.scan`` and sharded
+over available devices (``sharding.fleet``; a 1-device host runs the
+identical program without the placement). Because scenario knobs are
+data, one pack may mix scenarios — a 4-method x S-seed x K-scenario grid
+is 2 compiles total. Per-cell metrics come from the driver's
+device-resident accumulator, so the only host transfer is a handful of
+scalars per cell at the very end.
 
 ``run_cell`` is the sequential reference: an ordinary ``RolloutDriver``
 run for one cell, sharing the exact seed derivation (``cell_keys``) —
 used by the equivalence tests and as the baseline in
-``benchmarks/sweep_throughput.py``.
+``benchmarks/sweep_throughput.py``. Units in result rows: accuracies and
+SSP are fractions in [0, 1], ``throughput_tps`` is successful tasks per
+second per fleet, times are seconds.
 """
 from __future__ import annotations
 
@@ -42,7 +46,8 @@ def _scenario_env(cell: Cell) -> MECEnv:
 
 def _template_driver(cell: Cell, family: str):
     """Shared traced structure for every cell in a pack. The template's
-    own params/mask are never used — they are replaced per cell."""
+    own params/mask/scenario knobs are never used — they are replaced per
+    cell (the pack signature guarantees the *structure* matches)."""
     env = _scenario_env(cell)
     agent = OffloadingAgent(env, jax.random.PRNGKey(0), actor=family,
                             early_exit=True,
@@ -85,6 +90,11 @@ class PackProgram:
         masks = jnp.stack([
             make_exit_mask(env.N, env.L, METHOD_SPECS[c.method]["early_exit"])
             for c in cells])
+        # each cell's scenario knobs, stacked along the cell axis — this
+        # is what lets one compiled episode serve a mixed-scenario pack
+        sps = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[_scenario_env(c).params for c in cells])
 
         # pad the cell axis up to the device count (results discarded)
         n_real = len(cells)
@@ -93,18 +103,20 @@ class PackProgram:
             rep = lambda x: jnp.concatenate(
                 [x, jnp.repeat(x[-1:], n_pad, axis=0)], axis=0)
             pkeys, rkeys, masks = rep(pkeys), rep(rkeys), rep(masks)
+            sps = jax.tree_util.tree_map(rep, sps)
 
         params = jax.vmap(lambda k: init_params(pack.family, env, k))(pkeys)
         opt_states = jax.vmap(agent.opt.init)(params)
         carries = jax.vmap(
-            lambda k, p, o: drv.init_carry(k, params=p, opt_state=o))(
-            rkeys, params, opt_states)
-        self._carries, self._masks = shard_leading_axis((carries, masks),
-                                                        mesh)
+            lambda k, p, o, s: drv.init_carry(k, params=p, opt_state=o,
+                                              sp=s))(
+            rkeys, params, opt_states, sps)
+        self._carries, self._masks, self._sps = shard_leading_axis(
+            (carries, masks, sps), mesh)
 
-        def episode(cs, ms):
+        def episode(cs, ms, ss):
             def step(c, _):
-                new_c, _ = jax.vmap(drv._slot)(c, ms)
+                new_c, _ = jax.vmap(drv._slot)(c, ms, ss)
                 return new_c, None
 
             final, _ = jax.lax.scan(step, cs, None, length=ref.n_slots)
@@ -116,7 +128,7 @@ class PackProgram:
 
     def run(self) -> list:
         """Execute the episode; one metrics row per cell, in pack order."""
-        metrics = self._episode(self._carries, self._masks)
+        metrics = self._episode(self._carries, self._masks, self._sps)
         metrics = {k: np.asarray(v) for k, v in metrics.items()}
         rows = []
         for i, cell in enumerate(self.pack.cells):

@@ -21,7 +21,14 @@ from repro.mec.scenarios import SCENARIOS
 
 class Cell(NamedTuple):
     """One grid point. ``overrides`` is a sorted (key, value) tuple so
-    cells stay hashable."""
+    cells stay hashable.
+
+    Units/shape: ``slot_ms`` is milliseconds (converted to seconds at
+    env construction — everything inside the simulator is s/bits/bps);
+    ``n_devices`` is M, ``n_fleets`` the driver's fleet axis B,
+    ``n_slots`` the episode length T. A cell's execution position (which
+    pack, which index) never affects its numbers — seeds come from
+    ``cell_keys`` alone."""
     scenario: str
     method: str
     seed: int

@@ -1,0 +1,38 @@
+"""Docs stay truthful: relative links resolve, quickstart commands refer
+to real files, the README's verify command matches the ROADMAP."""
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_readme_and_architecture_exist():
+    assert os.path.exists(os.path.join(ROOT, "README.md"))
+    assert os.path.exists(os.path.join(ROOT, "docs", "ARCHITECTURE.md"))
+
+
+def test_relative_links_resolve():
+    sys.path.insert(0, os.path.join(ROOT, "tools"))
+    try:
+        from check_docs_links import broken_links, default_docs
+    finally:
+        sys.path.pop(0)
+    for path in default_docs(ROOT):
+        assert broken_links(path) == [], path
+
+
+def test_link_checker_cli_passes():
+    p = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tools", "check_docs_links.py")],
+                       capture_output=True, text=True, timeout=60)
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+def test_readme_commands_reference_real_files():
+    text = open(os.path.join(ROOT, "README.md"), encoding="utf-8").read()
+    for script in re.findall(r"python (examples/\w+\.py)", text):
+        assert os.path.exists(os.path.join(ROOT, script)), script
+    assert "python -m pytest -x -q" in text        # tier-1 verify command
+    assert "python -m repro.launch sweep" in text

@@ -1,0 +1,271 @@
+"""Scenario-as-data: ScenarioParams threading, bitwise equivalence with
+the baked-constant path, cross-scenario packing, scenario spaces."""
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_agent
+from repro.mec import (MECEnv, PRIMITIVE_FIELDS, SCENARIOS, ScenarioParams,
+                       derive_params, interpolate_params, make_scenario,
+                       scenario_params, scenario_space)
+from repro.rollout import RolloutDriver
+from repro.sweep import SweepSpec, pack_cells, run_cell, run_pack
+
+
+def tree_digest(tree) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def tiny_driver(scenario: str, method: str = "grle", m: int = 3,
+                fleets: int = 2):
+    cfg = make_scenario(scenario, n_devices=m)
+    env = MECEnv(cfg)
+    agent = make_agent(method, env, jax.random.PRNGKey(0), buffer_size=16,
+                       batch_size=4, train_every=5)
+    return cfg, RolloutDriver(agent, n_fleets=fleets)
+
+
+# ------------------------------------------------------ baked == traced sp
+class TestBakedTracedEquivalence:
+    """The refactor's core guarantee: threading a scenario's knobs as a
+    traced ScenarioParams pytree produces *bitwise* the same trajectories
+    as closing over them as compile-time constants (`sp=None`)."""
+
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+    def test_trajectory_bitwise_identical(self, scenario):
+        cfg, drv = tiny_driver(scenario)
+        key = jax.random.PRNGKey(7)
+        _, baked = drv.run(key, 12, mode="scan")
+        _, traced = drv.run(key, 12, mode="scan", sp=cfg.scenario_params())
+        assert tree_digest(baked) == tree_digest(traced)
+
+    def test_env_step_and_observe_bitwise(self):
+        cfg = make_scenario("fig8_csi", n_devices=4)
+        env = MECEnv(cfg)
+        sp = cfg.scenario_params()
+        key = jax.random.PRNGKey(3)
+        state = env.reset()
+        t_a, t_b = env.sample_slot(key), env.sample_slot(key, sp)
+        assert tree_digest(t_a) == tree_digest(t_b)
+        o_a, o_b = env.observe(state, t_a), env.observe(state, t_a, sp)
+        assert tree_digest(o_a) == tree_digest(o_b)
+        dec = jnp.zeros((env.M,), jnp.int32)
+        s_a, r_a = env.step(state, t_a, dec)
+        s_b, r_b = env.step(state, t_a, dec, sp)
+        assert tree_digest((s_a, r_a)) == tree_digest((s_b, r_b))
+
+    def test_swapping_sp_does_not_recompile(self):
+        """One compiled episode serves any scenario of the same shape."""
+        cfg, drv = tiny_driver("fig5_baseline")
+        key = jax.random.PRNGKey(0)
+        drv.run(key, 6, mode="scan", sp=cfg.scenario_params())
+        fn = drv._scan_cache[6]
+        other = make_scenario("fig8_csi", n_devices=3).scenario_params()
+        before = fn._cache_size()
+        drv.run(key, 6, mode="scan", sp=other)
+        assert fn._cache_size() == before
+
+
+# ------------------------------------------------------ cross-scenario packs
+class TestCrossScenarioPacking:
+    def spec(self, scenarios, methods=("grle", "grl", "drooe", "droo"),
+             seeds=(0,)):
+        return SweepSpec(scenarios=scenarios, methods=methods, seeds=seeds,
+                         n_devices=3, n_slots=12, replay_capacity=16,
+                         batch_size=4, train_every=5)
+
+    def test_full_grid_is_two_compiles(self):
+        """4 methods x S seeds x K scenarios -> one pack per actor family."""
+        spec = self.spec(("fig5_baseline", "fig6_capacity", "fig7_jitter",
+                          "fig8_csi"), seeds=(0, 1))
+        packs = pack_cells(spec.expand())
+        assert len(packs) == 2
+        assert sorted(p.family for p in packs) == ["gcn", "mlp"]
+        for p in packs:
+            assert len(p.cells) == 4 * 2 * 2      # K x methods/family x seeds
+            assert len(p.scenarios) == 4
+
+    def test_structural_mismatch_still_splits(self):
+        """Different workload family = different program; cannot pack."""
+        spec = self.spec(("fig6_capacity", "dyn_poisson"),
+                         methods=("grle",))
+        packs = pack_cells(spec.expand())
+        assert len(packs) == 2
+
+    def test_mixed_pack_equals_per_scenario_packs(self):
+        """A mixed-scenario pack reproduces per-scenario packs exactly."""
+        spec = self.spec(("fig5_baseline", "fig8_csi"),
+                         methods=("grle", "grl"))
+        cells = spec.expand()
+        (mixed,) = pack_cells(cells)
+        rows_mixed = dict(zip(mixed.cells, run_pack(mixed)))
+        for pack in pack_cells(cells, split_scenarios=True):
+            for cell, ref in zip(pack.cells, run_pack(pack)):
+                assert rows_mixed[cell] == ref, cell.label()
+
+    def test_mixed_pack_matches_sequential_cells(self):
+        spec = self.spec(("fig5_baseline", "fig6_capacity"),
+                         methods=("grle", "droo"))
+        (gcn, mlp) = pack_cells(spec.expand())
+        for pack in (gcn, mlp):
+            for cell, row in zip(pack.cells, run_pack(pack)):
+                ref = run_cell(cell)
+                assert row["tasks"] == ref["tasks"]
+                for k in ("avg_accuracy", "ssp", "throughput_tps",
+                          "avg_reward"):
+                    np.testing.assert_allclose(row[k], ref[k], rtol=1e-4,
+                                               err_msg=f"{cell.label()}:{k}")
+
+
+# ----------------------------------------------------------- scenario spaces
+class TestScenarioSpace:
+    def test_samples_stay_inside_box(self):
+        space = scenario_space("fig5_baseline", "fig8_csi", n_devices=4)
+        sp = space.sample_batch(jax.random.PRNGKey(0), 16)
+        for f in PRIMITIVE_FIELDS:
+            lo, hi = getattr(space.lo, f), getattr(space.hi, f)
+            v = np.asarray(getattr(sp, f))
+            assert (v >= np.minimum(lo, hi) - 1e-6).all(), f
+            assert (v <= np.maximum(lo, hi) + 1e-6).all(), f
+
+    def test_batch_draws_independent_of_batch_size(self):
+        """fold_in-per-index: growing the fleet never perturbs draw i."""
+        space = scenario_space("fig5_baseline", "fig8_csi", n_devices=4)
+        key = jax.random.PRNGKey(5)
+        small = space.sample_batch(key, 3)
+        large = space.sample_batch(key, 8)
+        for f in ScenarioParams._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(small, f)),
+                                          np.asarray(getattr(large, f))[:3])
+
+    def test_structurally_different_corners_rejected(self):
+        with pytest.raises(ValueError, match="differ structurally"):
+            scenario_space("fig5_baseline", "dyn_poisson", n_devices=4)
+
+    def test_interval_fields_never_inverted(self):
+        """Disjoint corner intervals cannot produce a (lo > hi) range."""
+        from repro.mec import ScenarioSpace
+        a = scenario_params("fig5_baseline", n_devices=4)
+        space = ScenarioSpace(
+            lo=a._replace(capacity_range=jnp.asarray([0.1, 0.5],
+                                                     jnp.float32)),
+            hi=a._replace(capacity_range=jnp.asarray([0.9, 1.0],
+                                                     jnp.float32)))
+        sp = space.sample_batch(jax.random.PRNGKey(0), 64)
+        cap = np.asarray(sp.capacity_range)
+        assert (cap[:, 0] <= cap[:, 1]).all()
+        assert np.asarray(sp.ar1_noise_cap >= 0).all()
+
+    def test_interpolation_endpoints_and_derived(self):
+        a = scenario_params("fig5_baseline", n_devices=4)
+        b = scenario_params("fig8_csi", n_devices=4)
+        at0 = interpolate_params(a, b, 0.0)
+        at1 = interpolate_params(a, b, 1.0)
+        for f in PRIMITIVE_FIELDS:
+            np.testing.assert_allclose(np.asarray(getattr(at0, f)),
+                                       np.asarray(getattr(a, f)), rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(getattr(at1, f)),
+                                       np.asarray(getattr(b, f)), rtol=1e-6)
+        # derived fields are recomputed, not blended: midpoint AR(1) noise
+        # must follow from midpoint rho/ranges via derive_params
+        mid = interpolate_params(a, b, 0.5)
+        prim = {f: getattr(mid, f) for f in PRIMITIVE_FIELDS}
+        ref = derive_params(prim, mid.exit_times_s, mid.exit_acc)
+        assert tree_digest(mid) == tree_digest(ref)
+
+    def test_derive_matches_config_builder(self):
+        """Traced float32 derivation agrees with the float64 config path
+        to float32 precision (they differ only in rounding order)."""
+        cfg = make_scenario("dyn_markov_channel", n_devices=4)
+        sp = cfg.scenario_params()
+        prim = {f: getattr(sp, f) for f in PRIMITIVE_FIELDS}
+        re = derive_params(prim, sp.exit_times_s, sp.exit_acc)
+        for f in ScenarioParams._fields:
+            np.testing.assert_allclose(np.asarray(getattr(re, f)),
+                                       np.asarray(getattr(sp, f)),
+                                       rtol=1e-6, err_msg=f)
+
+
+# --------------------------------------------------- domain-randomized fleets
+class TestPerFleetScenarios:
+    def test_per_fleet_dynamics_diverge(self):
+        """Fleets under different CSI-error draws see different worlds."""
+        cfg, _ = tiny_driver("fig5_baseline", m=4)
+        env = MECEnv(cfg)
+        agent = make_agent("grle", env, jax.random.PRNGKey(0),
+                           buffer_size=16, batch_size=4, train_every=5)
+        drv = RolloutDriver(agent, n_fleets=3, per_fleet_scenarios=True)
+        space = scenario_space("fig5_baseline", "fig8_csi", n_devices=4)
+        sp = space.sample_batch(jax.random.PRNGKey(1), 3)
+        carry, trace = drv.run(jax.random.PRNGKey(2), 10, sp=sp)
+        assert trace.reward.shape == (10, 3)
+        assert np.isfinite(np.asarray(trace.reward)).all()
+
+    def test_scan_loop_agree_per_fleet(self):
+        """Same episode either mode (XLA reduction fusion may move the
+        last ulp of the reward sum, hence allclose not bitwise)."""
+        cfg, _ = tiny_driver("fig5_baseline", m=4)
+        env = MECEnv(cfg)
+        agent = make_agent("grle", env, jax.random.PRNGKey(0),
+                           buffer_size=16, batch_size=4, train_every=5)
+        drv = RolloutDriver(agent, n_fleets=2, per_fleet_scenarios=True)
+        space = scenario_space("fig5_baseline", "fig8_csi", n_devices=4)
+        sp = space.sample_batch(jax.random.PRNGKey(1), 2)
+        _, t_scan = drv.run(jax.random.PRNGKey(2), 8, mode="scan", sp=sp)
+        _, t_loop = drv.run(jax.random.PRNGKey(2), 8, mode="loop", sp=sp)
+        np.testing.assert_array_equal(np.asarray(t_scan.decisions),
+                                      np.asarray(t_loop.decisions))
+        np.testing.assert_allclose(np.asarray(t_scan.reward),
+                                   np.asarray(t_loop.reward), rtol=1e-5)
+
+
+# ------------------------------------------------------------- serve engine
+class TestServeScenarioPlumbing:
+    def _engine(self, **kw):
+        from repro.configs import get_arch
+        from repro.serve import EdgeServingEngine, Replica
+        cfg = get_arch("qwen1_5_0_5b", reduced=True)
+        return EdgeServingEngine(cfg, [Replica("a"), Replica("b", 0.5)],
+                                 batch_slots=3, key=jax.random.PRNGKey(0),
+                                 **kw)
+
+    def test_named_scenario_overlays_dynamics(self):
+        eng = self._engine(scenario="fig6_capacity")
+        assert eng.env.cfg.capacity_range == (0.25, 1.0)
+        # structural fields stay the engine's own
+        assert eng.env.cfg.n_devices == 3 and eng.env.cfg.n_servers == 2
+
+    def test_explicit_args_beat_scenario_arrivals(self):
+        eng = self._engine(scenario="dyn_bursty", workload="poisson",
+                           arrival_rate=0.2)
+        assert eng.env.cfg.workload == "poisson"       # not the mmpp overlay
+        assert eng.env.cfg.arrival_rate == 0.2
+        # scenario's non-conflicting knobs still apply
+        assert eng.env.cfg.capacity_range == (0.25, 1.0)
+
+    def test_hot_swap_scenario_params(self):
+        eng = self._engine()
+        base = eng.env.params
+        harsh = base._replace(
+            csi_error=jnp.float32(0.3),
+            capacity_range=jnp.asarray([0.25, 0.5], jnp.float32))
+        eng.set_scenario_params(harsh)
+        assignments, info = eng.serve_slot(
+            [eng.make_request() for _ in range(2)])
+        assert len(assignments) == 2
+        eng.set_scenario_params(None)         # back to config knobs
+        assignments, _ = eng.serve_slot([eng.make_request()])
+        assert len(assignments) == 1
+
+    def test_wrong_exit_shape_rejected(self):
+        eng = self._engine()
+        bad = eng.env.params._replace(
+            exit_times_s=jnp.zeros((1, 1), jnp.float32))
+        with pytest.raises(ValueError, match="exit table shape"):
+            eng.set_scenario_params(bad)

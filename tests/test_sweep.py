@@ -65,14 +65,18 @@ class TestSpec:
 
 # ------------------------------------------------------------------- packer
 class TestPacker:
-    def test_packs_by_scenario_and_family(self):
+    def test_packs_by_family_across_scenarios(self):
+        """Scenarios are data: same-shape cells pack across scenarios,
+        leaving one mega-batch per actor family."""
         spec = tiny_spec(scenarios=("fig5_baseline", "fig6_capacity"),
                          methods=("grle", "grl", "drooe", "droo"))
         packs = pack_cells(spec.expand())
-        assert len(packs) == 4        # 2 scenarios x {gcn, mlp}
+        assert len(packs) == 2        # {gcn, mlp}
         for pack in packs:
-            assert len(pack.cells) == 4    # 2 methods x 2 seeds
-            assert len({c.scenario for c in pack.cells}) == 1
+            assert len(pack.cells) == 8    # 2 scenarios x 2 methods x 2 seeds
+            assert pack.scenarios == ("fig5_baseline", "fig6_capacity")
+        per_sc = pack_cells(spec.expand(), split_scenarios=True)
+        assert len(per_sc) == 4       # legacy grouping for baselines
 
     def test_pack_composition_independent_of_completion(self):
         """Packing is a pure function of the grid (resume stability)."""

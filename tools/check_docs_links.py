@@ -1,0 +1,58 @@
+"""Verify that relative markdown links in the docs resolve.
+
+    python tools/check_docs_links.py [files...]
+
+With no arguments checks README.md and docs/*.md. External links
+(http/https/mailto) are ignored; anchors are stripped before the
+existence check. Exit code 1 lists every dangling link.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# [text](target) — excluding images is not needed; they must resolve too
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def broken_links(md_path: str) -> list:
+    """(link, reason) pairs for every unresolvable relative link."""
+    base = os.path.dirname(os.path.abspath(md_path))
+    bad = []
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            bad.append((target, f"no such path relative to {base}"))
+    return bad
+
+
+def default_docs(root: str) -> list:
+    docs = [os.path.join(root, "README.md")]
+    docs += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    return [d for d in docs if os.path.exists(d)]
+
+
+def main(argv=None) -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = (argv if argv else None) or default_docs(root)
+    failures = 0
+    for path in files:
+        for link, reason in broken_links(path):
+            print(f"{path}: broken link {link!r} ({reason})")
+            failures += 1
+    if failures:
+        return 1
+    print(f"ok: {len(files)} file(s), all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
