@@ -2,9 +2,17 @@
 
 Trains the GRLE agent online for a few hundred slots on the 14-device /
 2-ES network with VGG-16 Table-I exit profiles, and compares against DROO
-(no GCN, no early exit).
+(no GCN, no early exit), using the pure-functional agent API:
+``agent_def(method, env)`` builds a static ``AgentDef`` spec, ``init``
+returns the ``AgentState`` pytree, and the jitted ``step`` is the fused
+Algorithm-1 slot body (decide + replay-add + cond-train).
 
-    PYTHONPATH=src python examples/quickstart.py [--slots 400]
+    PYTHONPATH=src python examples/quickstart.py [--slots 400] [--legacy]
+
+``--legacy`` drives the same loop through the deprecated
+``OffloadingAgent`` compatibility shim instead — CI runs it with
+deprecation warnings promoted to errors (the shim's own warning
+allow-listed) to prove the shim stays deprecation-clean.
 """
 from __future__ import annotations
 
@@ -12,20 +20,35 @@ import argparse
 
 import jax
 
-from repro.core import make_agent
+from repro.core import agent_def, make_agent
 from repro.mec import MECConfig, MECEnv, RunningMetrics
 
 
-def run(method: str, slots: int, seed: int = 0):
+def run(method: str, slots: int, seed: int = 0, legacy: bool = False):
     env = MECEnv(MECConfig(n_devices=14))          # paper defaults
     key = jax.random.PRNGKey(seed)
-    agent = make_agent(method, env, key, seed=seed)
     metrics = RunningMetrics(slot_s=env.cfg.slot_s)
     state = env.reset()
+
+    if legacy:
+        # deprecated shim; same batch_size as the pure path so both
+        # variants train on the same schedule under the unified gate
+        agent = make_agent(method, env, key, batch_size=32)
+        act = lambda s, t: agent.act(s, t)[0]
+    else:
+        adef = agent_def(method, env, batch_size=32)
+        agent_state = adef.init(key)
+        step = jax.jit(adef.step)
+
+        def act(s, t):
+            nonlocal agent_state
+            agent_state, decision, _ = step(agent_state, s, t)
+            return decision
+
     for i in range(slots):
         key, sk = jax.random.split(key)
         tasks = env.sample_slot(sk)
-        decision, info = agent.act(state, tasks)
+        decision = act(state, tasks)
         state, result = env.step(state, tasks, decision)
         metrics.update(result)
         if i % 100 == 0:
@@ -38,11 +61,13 @@ def run(method: str, slots: int, seed: int = 0):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=400)
+    ap.add_argument("--legacy", action="store_true",
+                    help="use the deprecated OffloadingAgent shim")
     args = ap.parse_args()
     print("=== GRLE (the paper's method) ===")
-    grle = run("grle", args.slots)
+    grle = run("grle", args.slots, legacy=args.legacy)
     print("=== DROO (baseline, no early exit) ===")
-    droo = run("droo", args.slots)
+    droo = run("droo", args.slots, legacy=args.legacy)
     print("\nmethod   accuracy   SSP     throughput")
     for name, m in [("GRLE", grle), ("DROO", droo)]:
         print(f"{name:6s}  {m['avg_accuracy']:.3f}     {m['ssp']:.3f}"

@@ -20,7 +20,7 @@ import argparse
 
 import jax
 
-from repro.core import make_agent
+from repro.core import agent_def
 from repro.mec import (MECEnv, interpolate_params, make_scenario,
                        scenario_params, scenario_space)
 from repro.rollout import RolloutDriver, carry_metrics
@@ -37,24 +37,25 @@ def main() -> None:
     cfg = make_scenario("fig5_baseline", n_devices=args.devices)
     env = MECEnv(cfg)
     key = jax.random.PRNGKey(args.seed)
-    agent = make_agent("grle", env, key, buffer_size=256, batch_size=32,
-                       train_every=10)
+    adef = agent_def("grle", env, buffer_size=256, batch_size=32,
+                     train_every=10)
 
     # --- train: every fleet draws its own dynamics from the fig5->fig8 box
     space = scenario_space("fig5_baseline", "fig8_csi",
                            n_devices=args.devices)
     sp_fleet = space.sample_batch(jax.random.fold_in(key, 1), args.fleets)
-    driver = RolloutDriver(agent, n_fleets=args.fleets,
+    driver = RolloutDriver(adef, n_fleets=args.fleets,
                            per_fleet_scenarios=True)
     carry, _ = driver.run(jax.random.fold_in(key, 2), args.slots,
-                          sp=sp_fleet)
-    driver.sync_agent(carry)
+                          sp=sp_fleet,
+                          agent_state=adef.init(key))
+    trained = carry.agent_state            # the result IS a pytree
     train = carry_metrics(carry, slot_s=cfg.slot_s, n_fleets=args.fleets)
     print(f"[train] {args.fleets} randomized fleets x {args.slots} slots: "
           f"ssp {train['ssp']:.3f}  acc {train['avg_accuracy']:.3f}")
 
     # --- eval on fixed scenarios: same compiled episode, new sp data
-    eval_driver = RolloutDriver(agent, n_fleets=args.fleets, train=False)
+    eval_driver = RolloutDriver(adef, n_fleets=args.fleets, train=False)
     corners = {
         "fig5_baseline": scenario_params("fig5_baseline",
                                          n_devices=args.devices),
@@ -65,7 +66,7 @@ def main() -> None:
     print("\nscenario        SSP     accuracy  throughput")
     for name, sp in corners.items():
         c, _ = eval_driver.run(jax.random.fold_in(key, 3), args.slots // 2,
-                               sp=sp)
+                               sp=sp, agent_state=trained)
         m = carry_metrics(c, slot_s=cfg.slot_s, n_fleets=args.fleets)
         print(f"{name:14s}  {m['ssp']:.3f}   {m['avg_accuracy']:.3f}"
               f"     {m['throughput_tps']:.1f} tasks/s")

@@ -6,18 +6,30 @@ from repro.core.quantize import (
     max_candidates,
 )
 from repro.core.replay import ReplayBuffer
-from repro.core.agent import (
+from repro.core.devreplay import (
+    DeviceReplay,
+    replay_add,
+    replay_init,
+    replay_sample,
+)
+from repro.core.policy import (
     METHOD_SPECS,
-    OffloadingAgent,
+    AgentDef,
+    AgentState,
+    StepAux,
     actor_family,
+    agent_def,
     init_params,
-    make_agent,
     make_exit_mask,
 )
+from repro.core.agent import OffloadingAgent, make_agent
 
 __all__ = [
     "MECGraph", "build_graph", "pad_graph",
     "one_hot_candidates", "binary_order_preserving", "max_candidates",
-    "ReplayBuffer", "OffloadingAgent", "make_agent",
+    "ReplayBuffer",
+    "DeviceReplay", "replay_init", "replay_add", "replay_sample",
+    "AgentDef", "AgentState", "StepAux", "agent_def",
     "METHOD_SPECS", "actor_family", "init_params", "make_exit_mask",
+    "OffloadingAgent", "make_agent",
 ]

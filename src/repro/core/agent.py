@@ -1,245 +1,171 @@
-"""GRLE agent (Algorithm 1) and its ablations.
+"""Deprecated stateful agent shim over ``repro.core.policy``.
 
-One `OffloadingAgent` covers the paper's four methods:
+.. deprecated::
+    ``OffloadingAgent`` predates the pure-functional agent API. The
+    agent layer now lives in ``repro.core.policy``: ``AgentDef`` (static
+    spec, pure methods) + ``AgentState`` (one pytree of params, opt
+    state, replay ring, RNG, counters). This class remains as a thin
+    compatibility wrapper — every call delegates to the same
+    ``AgentDef`` methods the rollout/sweep/serve subsystems use, so the
+    two APIs are equivalent under fixed seeds (tested in
+    ``tests/test_policy.py``). New code should do::
 
-  GRLE  = actor="gcn" + early_exit=True      (the paper's contribution)
-  GRL   = actor="gcn" + early_exit=False
-  DROOE = actor="mlp" + early_exit=True
-  DROO  = actor="mlp" + early_exit=False     (Huang et al. 2020 baseline)
+        from repro.core import agent_def
+        adef = agent_def("grle", env)         # or "grl"/"drooe"/"droo"
+        state = adef.init(key)
+        state, decision, aux = adef.step(state, mec_state, tasks)
 
-The actor predicts a relaxed decision x̂ over (device, option) edges; the
-critic quantizes it into S candidates (order-preserving), scores each with
-the reward simulator (Eq 15) and keeps the best; (G_k, x*_k) goes to the
-replay buffer; every ω slots the actor trains on a minibatch with the
-cross-entropy loss (Eq 16), Adam lr=1e-3 — all per §VI-A.
+``METHOD_SPECS``/``actor_family``/``init_params``/``make_exit_mask``/
+``MLPActor`` are re-exported from ``policy`` for import compatibility.
 """
 from __future__ import annotations
 
-import functools
+import math
+import warnings
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import gcn
-from repro.core.graph import MECGraph, build_graph
-from repro.core.quantize import max_candidates, one_hot_candidates
-from repro.core.replay import ReplayBuffer
+from repro.core.policy import (  # noqa: F401  (compat re-exports)
+    METHOD_SPECS,
+    AgentDef,
+    AgentState,
+    MLPActor,
+    actor_family,
+    agent_def,
+    init_params,
+    make_exit_mask,
+)
 from repro.mec.env import MECEnv, MECState, SlotTasks
-from repro.nn import Linear, MLP
-from repro.optim import adam
-from repro.optim.optimizers import apply_updates
 
 
-# --------------------------------------------------------------------- actors
-class MLPActor:
-    """DROO's DNN actor: flat channel-state features -> edge scores.
-
-    Per the paper (§VI-C), DROO(E) sees only wireless channel state and task
-    info — no queue backlogs, no ES capacity — which is exactly its stated
-    weakness vs the GCN.
-    """
-
-    @staticmethod
-    def init(key, n_devices: int, n_servers: int, n_options: int,
-             hidden: int = 256):
-        in_dim = n_devices * (n_servers + 2)
-        k1, k2 = jax.random.split(key)
-        return {
-            "trunk": MLP.init(k1, in_dim, hidden, hidden),
-            "head": Linear.init(k2, hidden, n_devices * n_options),
-        }
-
-    @staticmethod
-    def features(g: MECGraph, n_exits: int):
-        # edge_rate was expanded over exits in build_graph; recover [M, N]
-        rates = g.adj[:, ::n_exits]
-        task = g.device_feat[:, :2]                  # size, deadline
-        return jnp.concatenate([rates, task], axis=-1).reshape(-1)
-
-    @staticmethod
-    def apply(params, g: MECGraph, n_exits: int):
-        x = MLPActor.features(g, n_exits)
-        h = jax.nn.relu(MLP.apply(params["trunk"], x))
-        m, o = g.adj.shape
-        logits = Linear.apply(params["head"], h).reshape(m, o)
-        logits = jnp.where(g.mask > 0.5, logits, -1e9)
-        return jax.nn.sigmoid(logits), logits
-
-
-# ----------------------------------------------------------------- pure init
-# Method name -> (actor family, early-exit flag). The four rows of §VI-C.
-METHOD_SPECS = {
-    "grle": dict(actor="gcn", early_exit=True),
-    "grl": dict(actor="gcn", early_exit=False),
-    "drooe": dict(actor="mlp", early_exit=True),
-    "droo": dict(actor="mlp", early_exit=False),
-}
-
-
-def actor_family(method: str) -> str:
-    """'gcn' or 'mlp' — methods in one family share a param pytree."""
-    return METHOD_SPECS[method.lower()]["actor"]
-
-
-def init_params(actor: str, env: MECEnv, key: jax.Array,
-                hidden=(128, 64)) -> dict:
-    """Fresh actor params as a pure function of (key, env dims).
-
-    Safe under ``vmap`` over keys, which is how the sweep packer builds
-    per-cell params without constructing a stateful ``OffloadingAgent``.
-    """
-    if actor == "gcn":
-        return gcn.init(key, 7, 4, hidden=hidden)  # 6 obs feats + device-id
-    if actor == "mlp":
-        return MLPActor.init(key, env.M, env.N, env.N * env.L)
-    raise ValueError(f"unknown actor {actor!r}")
-
-
-def make_exit_mask(n_servers: int, n_exits: int,
-                   early_exit: bool) -> jax.Array:
-    """[N*L] option mask; without early-exit only final exits are allowed."""
-    mask = np.ones((n_servers * n_exits,), np.float32)
-    if not early_exit:
-        mask[:] = 0.0
-        mask[n_exits - 1::n_exits] = 1.0
-    return jnp.asarray(mask)
-
-
-# ---------------------------------------------------------------------- agent
+# ---------------------------------------------------------------------- shim
 class OffloadingAgent:
+    """Mutable facade over an ``AgentDef`` + ``AgentState`` pair.
+
+    Construction emits a ``DeprecationWarning``; behavior tracks the
+    pure API exactly (including the unified full-minibatch training
+    gate — the old host path's train-on-2-entries shortcut is gone).
+    """
+
     def __init__(self, env: MECEnv, key: jax.Array, *, actor: str = "gcn",
                  early_exit: bool = True, hidden=(128, 64),
                  buffer_size: int = 128, batch_size: int = 64,
                  train_every: int = 10, lr: float = 1e-3,
                  n_candidates: Optional[int] = None, seed: int = 0,
                  use_kernel: bool = False):
-        self.env = env
-        self.actor_type = actor
-        self.early_exit = early_exit
-        self.batch_size = batch_size
-        self.train_every = train_every
-        self.use_kernel = use_kernel
-        M, N, L = env.M, env.N, env.L
-        self.n_exits = L
-        s_max = max_candidates(M, N * L)
-        self.n_candidates = min(n_candidates or M * N * L, s_max)
-
-        self.params = init_params(actor, env, key, hidden=hidden)
-
-        self.opt = adam(lr)
-        self.opt_state = self.opt.init(self.params)
-        self.replay = ReplayBuffer(buffer_size, seed=seed)
+        warnings.warn(
+            "OffloadingAgent is deprecated; use repro.core.AgentDef / "
+            "AgentState (see repro.core.policy) instead",
+            DeprecationWarning, stacklevel=2)
+        del seed, use_kernel          # legacy knobs; RNG lives in AgentState
+        self.adef = AgentDef(env=env, actor=actor, early_exit=early_exit,
+                             hidden=tuple(hidden), n_candidates=n_candidates,
+                             buffer_size=buffer_size, batch_size=batch_size,
+                             train_every=train_every, lr=lr)
+        self.state: AgentState = self.adef.init(key)
         self.loss_history: list[float] = []
-        self._steps = 0
-
-        self._exit_mask = make_exit_mask(N, L, early_exit)
-
-        self._score_fn = jax.jit(self._scores)
-        self._train_fn = jax.jit(self._train_step)
+        self._step_fn = jax.jit(self.adef.step)
+        self._train_fn = jax.jit(self.adef.train_step)
         self._decide_fn = jax.jit(self._decide)
-        self._key = jax.random.fold_in(key, 0xC0FFEE)
-        # DROO keeps exploration alive by perturbing its relaxed action; we
-        # add K random-valid candidates to the critic's set (same effect,
-        # exactly S+K evaluations)
-        self.n_random = 16
 
-    # ------------------------------------------------------------- actor pass
-    def _scores(self, params, g: MECGraph, exit_mask=None):
-        """``exit_mask=None`` uses the agent's own mask; the sweep packer
-        passes a per-cell mask instead (vmapped over cells)."""
-        if exit_mask is None:
-            exit_mask = self._exit_mask
-        if self.actor_type == "gcn":
-            x_hat, logits = gcn.apply(params, g)
-        else:
-            x_hat, logits = MLPActor.apply(params, g, self.n_exits)
-        # disallowed (masked-exit or disconnected) options get -inf scores so
-        # the order-preserving quantizer can never flip a device onto them
-        allowed = (exit_mask[None, :] > 0.5) & (g.mask > 0.5)
-        x_hat = jnp.where(allowed, x_hat, -1e9)
-        logits = jnp.where(allowed, logits, -1e9)
-        return x_hat, logits
+    # ------------------------------------------------------- legacy surface
+    @property
+    def env(self) -> MECEnv:
+        return self.adef.env
 
-    # --------------------------------------------------------------- decision
+    @property
+    def actor_type(self) -> str:
+        return self.adef.actor
+
+    @property
+    def early_exit(self) -> bool:
+        return self.adef.early_exit
+
+    @property
+    def batch_size(self) -> int:
+        return self.adef.batch_size
+
+    @property
+    def train_every(self) -> int:
+        return self.adef.train_every
+
+    @property
+    def n_exits(self) -> int:
+        return self.adef.n_exits
+
+    @property
+    def n_candidates(self) -> int:
+        return self.adef.n_candidates
+
+    @property
+    def n_random(self) -> int:
+        return self.adef.n_random
+
+    @property
+    def params(self):
+        return self.state.params
+
+    @params.setter
+    def params(self, value) -> None:
+        self.state = self.state._replace(params=value)
+
+    @property
+    def opt_state(self):
+        return self.state.opt_state
+
+    @opt_state.setter
+    def opt_state(self, value) -> None:
+        self.state = self.state._replace(opt_state=value)
+
+    # NOTE: the old ``agent.replay`` (a host ``ReplayBuffer`` with
+    # ``add``/``sample``/``__len__``) has no faithful equivalent here —
+    # the ring lives in ``self.state.replay`` as a ``DeviceReplay``
+    # pytree. No property is provided: an AttributeError is louder than
+    # a NamedTuple whose ``len()`` silently returns its field count.
+
     def _decide(self, params, state: MECState, tasks: SlotTasks, key,
                 exit_mask=None, sp=None):
-        """Fused actor+critic pass (one device dispatch per slot).
-
-        ``sp`` is an optional ``ScenarioParams`` pytree threaded into the
-        env's observe/evaluate — traced data, so callers can batch it
-        (per-cell in sweep packs, per-fleet in domain-randomized drivers).
-        """
+        """Legacy fused actor+critic entry point (explicit params/mask)."""
         if exit_mask is None:
-            exit_mask = self._exit_mask
-        obs = self.env.observe(state, tasks, sp)
-        g = build_graph(obs, self.env.N, self.env.L)
-        x_hat, _ = self._scores(params, g, exit_mask)
-        cands = one_hot_candidates(x_hat, self.n_candidates)
-        if self.n_random:
-            # exploration candidates drawn uniformly over *allowed* options
-            allowed = (exit_mask[None, :] > 0.5) & (g.mask > 0.5)
-            gumbel = jax.random.gumbel(
-                key, (self.n_random, *allowed.shape))
-            rand = jnp.argmax(jnp.where(allowed[None], gumbel, -jnp.inf),
-                              axis=-1).astype(jnp.int32)
-            cands = jnp.concatenate([cands, rand], axis=0)
-        q = self.env.evaluate(state, tasks, cands, sp)
-        best = jnp.argmax(q)
-        return cands[best], q[best], g
+            exit_mask = self.adef.exit_mask()
+        return self.adef.decide_with(params, exit_mask, state, tasks, key,
+                                     sp)
 
+    # --------------------------------------------------------------- acting
     def act(self, state: MECState, tasks: SlotTasks, *, train: bool = True,
             sp=None):
         """Algorithm 1, one slot. Returns (decision [M], info dict)."""
-        self._key, sub = jax.random.split(self._key)
-        decision, q_best, g = self._decide_fn(self.params, state, tasks, sub,
-                                              None, sp)
-        info = {"q_est": float(q_best), "n_candidates": self.n_candidates}
         if train:
-            self.replay.add(g, decision)
-            self._steps += 1
-            if self._steps % self.train_every == 0 and len(self.replay) >= 2:
-                info["loss"] = self.train_minibatch()
-        return decision, info
+            self.state, decision, aux = self._step_fn(
+                self.state, state, tasks, None, sp)
+            info = {"q_est": float(aux.q_est),
+                    "n_candidates": self.adef.n_candidates}
+            loss = float(aux.loss)
+            if not math.isnan(loss):
+                info["loss"] = loss
+                self.loss_history.append(loss)
+            return decision, info
+        new_key, sub = jax.random.split(self.state.key)
+        self.state = self.state._replace(key=new_key)
+        decision, q_best, _ = self._decide_fn(self.state.params, state,
+                                              tasks, sub, None, sp)
+        return decision, {"q_est": float(q_best),
+                          "n_candidates": self.adef.n_candidates}
 
-    # ---------------------------------------------------------------- training
-    def _loss(self, params, graphs: MECGraph, decisions, exit_mask=None):
-        """Averaged masked BCE over edges (Eq 16)."""
-        if exit_mask is None:
-            exit_mask = self._exit_mask
-
-        def one(g, dec):
-            _, logits = self._scores(params, g, exit_mask)
-            m, o = logits.shape
-            target = jax.nn.one_hot(dec, o)                       # [M, O]
-            valid = g.mask * exit_mask[None, :]
-            # numerically-stable BCE from logits
-            per_edge = jnp.maximum(logits, 0) - logits * target \
-                + jnp.log1p(jnp.exp(-jnp.abs(logits)))
-            return jnp.sum(per_edge * valid) / jnp.maximum(valid.sum(), 1.0)
-
-        return jnp.mean(jax.vmap(one)(graphs, decisions))
-
-    def _train_step(self, params, opt_state, graphs, decisions,
-                    exit_mask=None):
-        loss, grads = jax.value_and_grad(self._loss)(params, graphs, decisions,
-                                                     exit_mask)
-        updates, opt_state = self.opt.update(grads, opt_state, params)
-        return apply_updates(params, updates), opt_state, loss
-
+    # ------------------------------------------------------------- training
     def train_minibatch(self) -> float:
-        graphs, decisions = self.replay.sample(self.batch_size)
-        graphs = MECGraph(*(jnp.asarray(p) for p in graphs))
-        self.params, self.opt_state, loss = self._train_fn(
-            self.params, self.opt_state, graphs, jnp.asarray(decisions))
+        if int(self.state.replay.size) < 1:
+            raise ValueError("replay buffer is empty — nothing to train on")
+        self.state, loss = self._train_fn(self.state)
         loss = float(loss)
         self.loss_history.append(loss)
         return loss
 
 
-def make_agent(method: str, env: MECEnv, key: jax.Array, **kw) -> OffloadingAgent:
-    """Factory for the paper's four methods by name."""
+def make_agent(method: str, env: MECEnv, key: jax.Array,
+               **kw) -> OffloadingAgent:
+    """Deprecated factory for the four methods; prefer ``agent_def``."""
     spec = dict(METHOD_SPECS[method.lower()])
     spec.update(kw)
     return OffloadingAgent(env, key, **spec)

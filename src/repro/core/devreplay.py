@@ -1,0 +1,105 @@
+"""Device-resident functional replay buffer (lives inside ``AgentState``).
+
+The host-side ``repro.core.replay.ReplayBuffer`` keeps a Python list and
+numpy RNG — fine for interactive use, but a ``lax.scan`` body cannot call
+back to the host. This module is the pure-``jnp`` counterpart: a ring
+buffer held in a NamedTuple of fixed-shape arrays, updated with scatter
+ops, living entirely inside the compiled episode. Since the agent API
+redesign it is a field of ``repro.core.policy.AgentState`` — the replay
+ring checkpoints, vmaps, and scans with the rest of the agent's mutable
+state. ``repro.rollout.replay`` re-exports these names for
+compatibility.
+
+Sampling is without replacement over the filled region (mirroring the
+host buffer's fix): per-slot uniform scores with invalid slots pushed to
++inf, take the ``batch`` smallest.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import MECGraph
+
+
+class DeviceReplay(NamedTuple):
+    """Ring buffer of (graph, decision) pairs; leading axis = capacity."""
+    device_feat: jax.Array   # [C, M, Fd]
+    option_feat: jax.Array   # [C, O, Fo]
+    adj: jax.Array           # [C, M, O]
+    mask: jax.Array          # [C, M, O]
+    decisions: jax.Array     # [C, M] int32
+    ptr: jax.Array           # scalar int32, next write slot
+    size: jax.Array          # scalar int32, filled entries (<= C)
+
+    @property
+    def capacity(self) -> int:
+        return self.decisions.shape[0]
+
+
+def replay_init(capacity: int, graph: MECGraph, n_devices: int) -> DeviceReplay:
+    """Empty buffer shaped after one example graph (shapes only are used)."""
+    z = lambda x: jnp.zeros((capacity,) + tuple(x.shape), jnp.float32)
+    return DeviceReplay(
+        device_feat=z(graph.device_feat),
+        option_feat=z(graph.option_feat),
+        adj=z(graph.adj),
+        mask=z(graph.mask),
+        decisions=jnp.zeros((capacity, n_devices), jnp.int32),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def replay_add(replay: DeviceReplay, graphs: MECGraph,
+               decisions: jax.Array) -> DeviceReplay:
+    """Append a batch of B entries (graph leaves carry a leading [B] axis).
+
+    Oldest entries are overwritten once full, exactly like the host ring.
+    """
+    b = decisions.shape[0]
+    cap = replay.capacity
+    if b > cap:
+        # duplicate scatter indices would make the surviving entries
+        # backend-dependent; shapes are static so we can refuse at trace time
+        raise ValueError(f"batch of {b} entries exceeds replay capacity {cap}")
+    idx = (replay.ptr + jnp.arange(b)) % cap
+    return DeviceReplay(
+        device_feat=replay.device_feat.at[idx].set(graphs.device_feat),
+        option_feat=replay.option_feat.at[idx].set(graphs.option_feat),
+        adj=replay.adj.at[idx].set(graphs.adj),
+        mask=replay.mask.at[idx].set(graphs.mask),
+        decisions=replay.decisions.at[idx].set(decisions.astype(jnp.int32)),
+        ptr=(replay.ptr + b) % cap,
+        size=jnp.minimum(replay.size + b, cap),
+    )
+
+
+def replay_sample(replay: DeviceReplay, key: jax.Array, batch_size: int):
+    """Uniform minibatch -> (MECGraph [B,...], [B, M]); static shapes.
+
+    Without replacement whenever the buffer holds >= ``batch_size``
+    entries. With fewer, the batch is clamped onto the filled region:
+    the first ``size`` rows are a permutation of every stored entry and
+    the remainder are uniform re-draws from it — well-defined (and still
+    uniform in expectation) instead of the previous modulo wrap, which
+    over-represented low slots and silently relied on callers never
+    training early.
+    """
+    cap = replay.capacity
+    k_perm, k_fill = jax.random.split(key)
+    scores = jax.random.uniform(k_perm, (cap,))
+    scores = jnp.where(jnp.arange(cap) < replay.size, scores, jnp.inf)
+    take = jnp.argsort(scores)[:batch_size]
+    fill = jax.random.randint(k_fill, (batch_size,), 0,
+                              jnp.maximum(replay.size, 1))
+    take = jnp.where(jnp.arange(batch_size) < replay.size, take, fill)
+    graphs = MECGraph(
+        device_feat=replay.device_feat[take],
+        option_feat=replay.option_feat[take],
+        adj=replay.adj[take],
+        mask=replay.mask[take],
+    )
+    return graphs, replay.decisions[take]

@@ -1,0 +1,386 @@
+"""Pure-functional agent API: ``AgentDef`` (static spec) / ``AgentState``.
+
+The paper's Algorithm 1 is a pure state transition — (params, replay,
+rng) evolve slot by slot — and this module models it exactly that way:
+
+* ``AgentDef`` — a hashable, frozen spec of everything *static*: the MEC
+  environment (graph shape), actor family, hidden sizes, candidate and
+  exploration counts, replay capacity, minibatch size, train cadence,
+  learning rate, early-exit flag. Its methods are pure functions of
+  their inputs; the def itself is closed over as trace-time structure
+  (safe under ``jit``/``vmap``/``scan``).
+* ``AgentState`` — a NamedTuple pytree carrying every *mutable* piece:
+  actor params, optimizer state, the device-resident ``DeviceReplay``
+  ring, the agent's RNG key, the slot counter, the exit mask (data, so
+  GRLE/GRL share one compiled program and differ only by state), and a
+  running loss stat. It vmaps (agent populations), checkpoints
+  bit-exactly (``repro.train.checkpoint.save_agent_state``), and scans.
+
+One ``AgentDef`` family covers the paper's four methods (§VI-C):
+
+  GRLE  = actor="gcn" + early_exit=True      (the paper's contribution)
+  GRL   = actor="gcn" + early_exit=False
+  DROOE = actor="mlp" + early_exit=True
+  DROO  = actor="mlp" + early_exit=False     (Huang et al. 2020 baseline)
+
+The slot body (``AgentDef.step``) is the fused Algorithm-1 iteration:
+actor proposes a relaxed x̂ over (device, option) edges, the critic
+quantizes it into S candidates (order-preserving), scores each with the
+reward simulator (Eq 15) and keeps the best; (G_k, x*_k) enters the
+replay ring; every ω slots the actor trains on a full minibatch with the
+cross-entropy loss (Eq 16), Adam lr=1e-3 — all per §VI-A. Training is
+gated on a *full* minibatch everywhere (host, loop, scan — one rule).
+
+``repro.core.agent.OffloadingAgent`` is a thin deprecated shim over this
+API; new code should construct defs via ``agent_def(method, env)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gcn
+from repro.core.devreplay import (DeviceReplay, replay_add, replay_init,
+                                  replay_sample)
+from repro.core.graph import MECGraph, build_graph
+from repro.core.quantize import max_candidates, one_hot_candidates
+from repro.mec.env import MECEnv, MECState, SlotTasks
+from repro.nn import Linear, MLP
+from repro.optim import adam
+from repro.optim.optimizers import apply_updates
+
+
+# --------------------------------------------------------------------- actors
+class MLPActor:
+    """DROO's DNN actor: flat channel-state features -> edge scores.
+
+    Per the paper (§VI-C), DROO(E) sees only wireless channel state and
+    task info — no queue backlogs, no ES capacity — which is exactly its
+    stated weakness vs the GCN.
+    """
+
+    @staticmethod
+    def init(key, n_devices: int, n_servers: int, n_options: int,
+             hidden: int = 256):
+        in_dim = n_devices * (n_servers + 2)
+        k1, k2 = jax.random.split(key)
+        return {
+            "trunk": MLP.init(k1, in_dim, hidden, hidden),
+            "head": Linear.init(k2, hidden, n_devices * n_options),
+        }
+
+    @staticmethod
+    def features(g: MECGraph, n_exits: int):
+        # edge_rate was expanded over exits in build_graph; recover [M, N]
+        rates = g.adj[:, ::n_exits]
+        task = g.device_feat[:, :2]                  # size, deadline
+        return jnp.concatenate([rates, task], axis=-1).reshape(-1)
+
+    @staticmethod
+    def apply(params, g: MECGraph, n_exits: int):
+        x = MLPActor.features(g, n_exits)
+        h = jax.nn.relu(MLP.apply(params["trunk"], x))
+        m, o = g.adj.shape
+        logits = Linear.apply(params["head"], h).reshape(m, o)
+        logits = jnp.where(g.mask > 0.5, logits, -1e9)
+        return jax.nn.sigmoid(logits), logits
+
+
+# ------------------------------------------------------------------ methods
+# Method name -> (actor family, early-exit flag). The four rows of §VI-C.
+METHOD_SPECS = {
+    "grle": dict(actor="gcn", early_exit=True),
+    "grl": dict(actor="gcn", early_exit=False),
+    "drooe": dict(actor="mlp", early_exit=True),
+    "droo": dict(actor="mlp", early_exit=False),
+}
+
+
+def actor_family(method: str) -> str:
+    """'gcn' or 'mlp' — methods in one family share a param pytree."""
+    return METHOD_SPECS[method.lower()]["actor"]
+
+
+def init_params(actor: str, env: MECEnv, key: jax.Array,
+                hidden=(128, 64)) -> dict:
+    """Fresh actor params as a pure function of (key, env dims)."""
+    if actor == "gcn":
+        return gcn.init(key, 7, 4, hidden=hidden)  # 6 obs feats + device-id
+    if actor == "mlp":
+        return MLPActor.init(key, env.M, env.N, env.N * env.L)
+    raise ValueError(f"unknown actor {actor!r}")
+
+
+def make_exit_mask(n_servers: int, n_exits: int,
+                   early_exit: bool) -> jax.Array:
+    """[N*L] option mask; without early-exit only final exits are allowed."""
+    mask = np.ones((n_servers * n_exits,), np.float32)
+    if not early_exit:
+        mask[:] = 0.0
+        mask[n_exits - 1::n_exits] = 1.0
+    return jnp.asarray(mask)
+
+
+# -------------------------------------------------------------------- state
+class AgentState(NamedTuple):
+    """Every mutable piece of Algorithm 1, as one registered pytree.
+
+    Batch a leading axis onto every leaf and you have an agent
+    population (the sweep runner's per-cell axis [C]); serialize it and
+    a killed training run resumes bit-exactly (``train.checkpoint``).
+    """
+    params: dict               # actor parameters (gcn or mlp family)
+    opt_state: dict            # Adam moments + step
+    replay: DeviceReplay       # device-resident (graph, decision) ring
+    key: jax.Array             # the agent's own RNG stream
+    step: jax.Array            # scalar int32: slots absorbed so far
+    exit_mask: jax.Array       # [N*L] float32 — data, not structure
+    last_loss: jax.Array       # scalar float32, NaN before first train
+    loss_sum: jax.Array        # scalar float32, sum of train losses
+    loss_count: jax.Array      # scalar int32, train steps taken
+
+
+class StepAux(NamedTuple):
+    """Per-slot scalars out of ``AgentDef.step``."""
+    q_est: jax.Array           # critic value of the chosen decision
+    loss: jax.Array            # train loss this slot, NaN if not due
+
+
+# ---------------------------------------------------------------------- def
+@dataclasses.dataclass(frozen=True)
+class AgentDef:
+    """Hashable static spec of one agent; all methods are pure.
+
+    The ``env`` is compared by identity (it is trace-time structure:
+    graph shapes and default scenario constants); every other field is a
+    plain hashable value, so an ``AgentDef`` can key ``jit`` caches.
+    Construct per-method defs with ``agent_def(method, env)``.
+    """
+    env: MECEnv
+    actor: str = "gcn"
+    early_exit: bool = True
+    hidden: Tuple[int, ...] = (128, 64)
+    n_candidates: Optional[int] = None
+    # DROO keeps exploration alive by perturbing its relaxed action; we
+    # add K random-valid candidates to the critic's set (same effect,
+    # exactly S+K evaluations)
+    n_random: int = 16
+    buffer_size: int = 128
+    batch_size: int = 64
+    train_every: int = 10
+    lr: float = 1e-3
+
+    def __post_init__(self):
+        if self.actor not in ("gcn", "mlp"):
+            raise ValueError(f"unknown actor {self.actor!r}")
+        env = self.env
+        s_max = max_candidates(env.M, env.N * env.L)
+        n_cand = min(self.n_candidates or env.M * env.N * env.L, s_max)
+        object.__setattr__(self, "n_candidates", int(n_cand))
+        object.__setattr__(self, "hidden", tuple(self.hidden))
+
+    # ------------------------------------------------------------ structure
+    @property
+    def n_exits(self) -> int:
+        return self.env.L
+
+    @property
+    def opt(self):
+        return adam(self.lr)
+
+    def exit_mask(self) -> jax.Array:
+        """[N*L] option mask for this def's ``early_exit`` flag."""
+        return make_exit_mask(self.env.N, self.env.L, self.early_exit)
+
+    def _graph_spec(self) -> MECGraph:
+        """Abstract graph shapes (no env execution) for the replay ring."""
+        env = self.env
+        state0 = env.reset()
+        tasks0 = jax.eval_shape(env.sample_slot, jax.random.PRNGKey(0))
+        return jax.eval_shape(
+            lambda s, t: build_graph(env.observe(s, t), env.N, env.L),
+            state0, tasks0)
+
+    def empty_replay(self) -> DeviceReplay:
+        return replay_init(self.buffer_size, self._graph_spec(), self.env.M)
+
+    # ----------------------------------------------------------------- init
+    def init(self, key: jax.Array) -> AgentState:
+        """Fresh agent state as a pure function of ``key``.
+
+        Safe under ``vmap`` over keys — the sweep runner builds a whole
+        pack's per-cell states with ``jax.vmap(def_.init)``.
+        """
+        k_params, k_rng = jax.random.split(key)
+        params = init_params(self.actor, self.env, k_params,
+                             hidden=self.hidden)
+        return AgentState(
+            params=params,
+            opt_state=self.opt.init(params),
+            replay=self.empty_replay(),
+            key=k_rng,
+            step=jnp.zeros((), jnp.int32),
+            exit_mask=self.exit_mask(),
+            last_loss=jnp.full((), jnp.nan, jnp.float32),
+            loss_sum=jnp.zeros((), jnp.float32),
+            loss_count=jnp.zeros((), jnp.int32),
+        )
+
+    def episode_state(self, state: AgentState, key: jax.Array) -> AgentState:
+        """Re-key ``state`` for a fresh episode: new RNG stream, empty
+        replay ring (sized to *this* def's ``buffer_size``), slot counter
+        and loss stats reset; learned params/opt state/mask carry over."""
+        return state._replace(
+            key=key,
+            replay=self.empty_replay(),
+            step=jnp.zeros((), jnp.int32),
+            last_loss=jnp.full((), jnp.nan, jnp.float32),
+            loss_sum=jnp.zeros((), jnp.float32),
+            loss_count=jnp.zeros((), jnp.int32),
+        )
+
+    # ----------------------------------------------------------- actor pass
+    def scores(self, params, g: MECGraph, exit_mask: jax.Array):
+        """Relaxed decision x̂ and logits over [M, N*L] edges."""
+        if self.actor == "gcn":
+            x_hat, logits = gcn.apply(params, g)
+        else:
+            x_hat, logits = MLPActor.apply(params, g, self.n_exits)
+        # disallowed (masked-exit or disconnected) options get -inf scores
+        # so the order-preserving quantizer can never flip a device onto
+        # them
+        allowed = (exit_mask[None, :] > 0.5) & (g.mask > 0.5)
+        x_hat = jnp.where(allowed, x_hat, -1e9)
+        logits = jnp.where(allowed, logits, -1e9)
+        return x_hat, logits
+
+    # ------------------------------------------------------------- decision
+    def decide_with(self, params, exit_mask: jax.Array, mec_state: MECState,
+                    tasks: SlotTasks, key: jax.Array, sp=None):
+        """Fused actor+critic pass with explicit (params, mask) — the
+        primitive both ``decide`` and the legacy shim build on.
+
+        ``sp`` is an optional ``ScenarioParams`` pytree threaded into the
+        env's observe/evaluate — traced data, so callers can batch it
+        (per-cell in sweep packs, per-fleet in domain-randomized
+        drivers). Returns (decision [M], q_best, graph).
+        """
+        env = self.env
+        obs = env.observe(mec_state, tasks, sp)
+        g = build_graph(obs, env.N, env.L)
+        x_hat, _ = self.scores(params, g, exit_mask)
+        cands = one_hot_candidates(x_hat, self.n_candidates)
+        if self.n_random:
+            # exploration candidates drawn uniformly over *allowed* options
+            allowed = (exit_mask[None, :] > 0.5) & (g.mask > 0.5)
+            gumbel = jax.random.gumbel(
+                key, (self.n_random, *allowed.shape))
+            rand = jnp.argmax(jnp.where(allowed[None], gumbel, -jnp.inf),
+                              axis=-1).astype(jnp.int32)
+            cands = jnp.concatenate([cands, rand], axis=0)
+        q = env.evaluate(mec_state, tasks, cands, sp)
+        best = jnp.argmax(q)
+        return cands[best], q[best], g
+
+    def decide(self, state: AgentState, mec_state: MECState,
+               tasks: SlotTasks, key: jax.Array, sp=None):
+        """One slot's decision from the agent's own params and exit mask.
+
+        Pure: does not consume ``state.key`` — the caller supplies the
+        exploration key (per-fleet streams in ``RolloutDriver``).
+        Returns (decision [M], q_best, graph).
+        """
+        return self.decide_with(state.params, state.exit_mask, mec_state,
+                                tasks, key, sp)
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, graphs: MECGraph, decisions, exit_mask):
+        """Averaged masked BCE over edges (Eq 16)."""
+
+        def one(g, dec):
+            _, logits = self.scores(params, g, exit_mask)
+            m, o = logits.shape
+            target = jax.nn.one_hot(dec, o)                       # [M, O]
+            valid = g.mask * exit_mask[None, :]
+            # numerically-stable BCE from logits
+            per_edge = jnp.maximum(logits, 0) - logits * target \
+                + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+            return jnp.sum(per_edge * valid) / jnp.maximum(valid.sum(), 1.0)
+
+        return jnp.mean(jax.vmap(one)(graphs, decisions))
+
+    # ------------------------------------------------------------- training
+    def train_step(self, state: AgentState):
+        """One Eq-16 minibatch update; advances ``state.key``.
+
+        Unconditional — callers gate on ``train_due``. Returns
+        (new state, loss).
+        """
+        key, k_samp = jax.random.split(state.key)
+        graphs, decisions = replay_sample(state.replay, k_samp,
+                                          self.batch_size)
+        loss, grads = jax.value_and_grad(self.loss)(
+            state.params, graphs, decisions, state.exit_mask)
+        updates, opt_state = self.opt.update(grads, state.opt_state,
+                                             state.params)
+        loss = loss.astype(jnp.float32)
+        new = state._replace(
+            params=apply_updates(state.params, updates),
+            opt_state=opt_state,
+            key=key,
+            last_loss=loss,
+            loss_sum=state.loss_sum + loss,
+            loss_count=state.loss_count + 1,
+        )
+        return new, loss
+
+    def absorb(self, state: AgentState, graphs: MECGraph,
+               decisions: jax.Array):
+        """Record one slot's B (graph, decision) pairs, then maybe train.
+
+        The one training-gating rule everywhere (host, loop, scan):
+        every ``train_every`` slots *and* only once the ring holds a full
+        ``batch_size`` minibatch. Returns (new state, loss — NaN when no
+        train step ran).
+        """
+        replay = replay_add(state.replay, graphs, decisions)
+        step = state.step + 1
+        state = state._replace(replay=replay, step=step)
+        due = ((step % self.train_every == 0)
+               & (replay.size >= self.batch_size))
+        return jax.lax.cond(
+            due, self.train_step,
+            lambda s: (s, jnp.full((), jnp.nan, jnp.float32)), state)
+
+    # ----------------------------------------------------------- slot body
+    def step(self, state: AgentState, mec_state: MECState, tasks: SlotTasks,
+             key: Optional[jax.Array] = None, sp=None):
+        """The fused Algorithm-1 slot body: decide + replay-add +
+        cond-train.
+
+        ``key=None`` draws the exploration key from ``state.key`` (the
+        self-contained host path); pass an explicit key to drive the
+        agent from an external schedule (``RolloutDriver``'s per-fleet
+        streams do exactly this, which is what makes the host and
+        scan paths bit-identical for one fleet). The environment
+        transition stays with the caller. Returns
+        (new state, decision [M], StepAux(q_est, loss)).
+        """
+        if key is None:
+            new_key, key = jax.random.split(state.key)
+            state = state._replace(key=new_key)
+        decision, q_best, g = self.decide(state, mec_state, tasks, key, sp)
+        g1 = jax.tree_util.tree_map(lambda x: x[None], g)
+        state, loss = self.absorb(state, g1, decision[None])
+        return state, decision, StepAux(q_est=q_best, loss=loss)
+
+
+def agent_def(method: str, env: MECEnv, **kw) -> AgentDef:
+    """Factory for the paper's four methods by name."""
+    spec = dict(METHOD_SPECS[method.lower()])
+    spec.update(kw)
+    return AgentDef(env=env, **spec)

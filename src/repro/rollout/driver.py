@@ -1,13 +1,22 @@
 """Scan-fused episode driver: Algorithm 1 compiled end-to-end.
 
 Layer 2 of the rollout subsystem. The legacy path dispatches ~3 device
-calls per slot from Python (``sample_slot`` -> ``OffloadingAgent.act`` ->
-``MECEnv.step``) plus host-side replay copies — per-slot host round-trips
-dominate wall-clock on long episodes. ``RolloutDriver`` runs the whole
-sample -> observe -> actor -> quantize -> critic-evaluate -> step ->
-(periodic train) pipeline for T slots and B fleets inside **one**
-``lax.scan``, with the replay buffer device-resident (``rollout.replay``)
-and training gated by ``lax.cond`` every ``train_every`` slots.
+calls per slot from Python (``sample_slot`` -> agent decide ->
+``MECEnv.step``) plus host-side replay copies — per-slot host
+round-trips dominate wall-clock on long episodes. ``RolloutDriver`` runs
+the whole sample -> observe -> actor -> quantize -> critic-evaluate ->
+step -> (periodic train) pipeline for T slots and B fleets inside
+**one** ``lax.scan``.
+
+The agent is a pure ``AgentDef``/``AgentState`` pair (``core.policy``):
+``RolloutCarry`` threads a single ``AgentState`` pytree — params, opt
+state, the device-resident replay ring, RNG, slot counter, exit mask,
+loss stats — through the scan, and the slot body calls
+``AgentDef.decide`` (vmapped over fleets) and ``AgentDef.absorb``
+(replay-add + ``lax.cond``-gated Eq-16 train). Training is gated on a
+full minibatch — the same rule as the host path's ``AgentDef.step``, so
+loop, scan, and host execution agree bit-for-bit for one fleet
+(tested).
 
 Both execution modes share the same slot body, so they are exactly
 equivalent under fixed seeds (tested):
@@ -18,23 +27,19 @@ equivalent under fixed seeds (tested):
 
 B fleets share one learner: every slot contributes B (graph, decision)
 pairs to the shared replay, and the Eq-16 minibatch update touches the
-shared params — a vectorized-RL fan-in. Training starts once the buffer
-holds a full minibatch (the host path trains on partial batches; the
-device ring keeps static shapes instead).
+shared params — a vectorized-RL fan-in.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent import OffloadingAgent
-from repro.core.graph import build_graph
+from repro.core.policy import AgentDef, AgentState
 from repro.rollout.metrics import (CellMetrics, metrics_init, metrics_update)
-from repro.rollout.replay import (DeviceReplay, replay_add, replay_init,
-                                  replay_sample)
 from repro.rollout.vecenv import VecMECEnv
 from repro.rollout.workloads import WorkloadGen, WorkloadState, make_workload
 
@@ -45,12 +50,13 @@ class RolloutCarry(NamedTuple):
     wl_state: WorkloadState    # batched [B, ...]
     task_keys: jax.Array       # [B] per-fleet task-draw streams
     dec_keys: jax.Array        # [B] per-fleet actor/exploration streams
-    train_key: jax.Array       # minibatch-sampling stream
-    params: dict
-    opt_state: NamedTuple
-    replay: DeviceReplay
-    step: jax.Array            # scalar int32, slots completed
+    agent_state: AgentState    # the shared learner, one pytree
     metrics: CellMetrics       # running all-fleets-pooled summary
+
+    @property
+    def params(self):
+        """Convenience view of the learner's params (legacy call sites)."""
+        return self.agent_state.params
 
 
 class RolloutTrace(NamedTuple):
@@ -67,6 +73,10 @@ class RolloutTrace(NamedTuple):
 class RolloutDriver:
     """Drives B fleets of one agent for T slots in one compiled episode.
 
+    ``agent`` is an ``AgentDef`` (preferred) or a legacy
+    ``OffloadingAgent`` shim — the shim's def and current state are
+    extracted, and ``sync_agent`` writes results back into it.
+
     Axis conventions: the fleet axis [B] leads every batched carry leaf;
     traces add a time axis [T] in front ([T, B, ...]). Scenario knobs
     enter as an optional ``ScenarioParams`` pytree ``sp`` on
@@ -77,24 +87,38 @@ class RolloutDriver:
     runner instead vmaps a per-cell ``sp`` over the whole slot body.
     """
 
-    def __init__(self, agent: OffloadingAgent, *, n_fleets: int = 1,
+    def __init__(self, agent, *, n_fleets: int = 1,
                  workload: Optional[WorkloadGen] = None, train: bool = True,
                  replay_capacity: Optional[int] = None,
                  batch_size: Optional[int] = None,
                  train_every: Optional[int] = None,
                  per_fleet_scenarios: bool = False):
-        self.agent = agent
+        if isinstance(agent, AgentDef):
+            adef, self._shim = agent, None
+        else:                         # legacy OffloadingAgent shim
+            adef, self._shim = agent.adef, agent
+        # episode-level overrides become a derived def: the def is the
+        # single source of truth for replay capacity / batch / cadence
+        overrides = {}
+        if replay_capacity is not None:
+            overrides["buffer_size"] = replay_capacity
+        if batch_size is not None:
+            overrides["batch_size"] = batch_size
+        if train_every is not None:
+            overrides["train_every"] = train_every
+        self.adef = (dataclasses.replace(adef, **overrides) if overrides
+                     else adef)
         # vmap axis for ScenarioParams inside the slot body: None shares
         # one scenario across fleets, 0 maps a [B]-leading pytree
         self._sp_axis = 0 if per_fleet_scenarios else None
-        self.env = agent.env
+        self.env = self.adef.env
         self.vec = VecMECEnv(self.env, n_fleets)
         self.workload = workload or make_workload(self.env)
         self.train = train
         self.n_fleets = n_fleets
-        self.batch_size = batch_size or agent.batch_size
-        self.train_every = train_every or agent.train_every
-        self.replay_capacity = replay_capacity or agent.replay.capacity
+        self.batch_size = self.adef.batch_size
+        self.train_every = self.adef.train_every
+        self.replay_capacity = self.adef.buffer_size
         if self.train and self.replay_capacity < self.batch_size:
             raise ValueError("replay capacity smaller than minibatch: "
                              "training would never trigger")
@@ -103,29 +127,33 @@ class RolloutDriver:
                 f"replay capacity {self.replay_capacity} cannot hold one "
                 f"slot's {n_fleets} fleet transitions")
 
-        # graph shapes for the device replay, without running the env
-        state0 = self.env.reset()
-        tasks0 = jax.eval_shape(self.env.sample_slot, jax.random.PRNGKey(0))
-        self._graph_spec = jax.eval_shape(
-            lambda s, t: build_graph(self.env.observe(s, t),
-                                     self.env.N, self.env.L),
-            state0, tasks0)
-
         self._jit_slot = jax.jit(self._slot)
         self._scan_cache: dict = {}
 
     # ------------------------------------------------------------------ carry
-    def init_carry(self, key: jax.Array, *, params=None,
-                   opt_state=None, sp=None) -> RolloutCarry:
+    def init_carry(self, key: jax.Array, *, agent_state=None,
+                   sp=None) -> RolloutCarry:
         """Fresh episode state; fleet streams are fold_in(key_i, fleet).
 
-        ``params``/``opt_state`` default to the interactive agent's but can
-        be supplied explicitly — the sweep packer vmaps this over per-cell
-        (key, params, opt_state, sp) tuples (every op here is vmappable).
-        ``sp`` seeds the workload state's rate/capacity marginals; None
-        uses the env config's own knobs.
+        ``agent_state`` defaults to the shim's live state (legacy
+        construction) or a fresh ``adef.init`` — the sweep packer vmaps
+        this over per-cell (key, agent_state, sp) tuples (every op here
+        is vmappable). Whatever state comes in is re-keyed for the
+        episode (``AgentDef.episode_state``): fresh RNG stream derived
+        from ``key``, empty replay ring, slot counter reset — learned
+        params/opt state/exit mask carry over. ``sp`` seeds the workload
+        state's rate/capacity marginals; None uses the env config's own
+        knobs.
         """
-        k_task, k_dec, k_train, k_wl = jax.random.split(key, 4)
+        k_task, k_dec, k_agent, k_wl = jax.random.split(key, 4)
+        # distinct streams for fresh-init vs the episode's train sampling:
+        # init() itself splits its key, so reusing k_agent for both would
+        # collide the first minibatch-sampling key with the param-init one
+        k_init, k_episode = jax.random.split(k_agent)
+        if agent_state is None:
+            agent_state = (self._shim.state if self._shim is not None
+                           else self.adef.init(k_init))
+        agent_state = self.adef.episode_state(agent_state, k_episode)
         wl_state = jax.vmap(self.workload.init,
                             in_axes=(0, self._sp_axis if sp is not None
                                      else None))(
@@ -135,29 +163,25 @@ class RolloutDriver:
             wl_state=wl_state,
             task_keys=self.vec.fleet_keys(k_task),
             dec_keys=self.vec.fleet_keys(k_dec),
-            train_key=k_train,
-            params=self.agent.params if params is None else params,
-            opt_state=self.agent.opt_state if opt_state is None else opt_state,
-            replay=replay_init(self.replay_capacity, self._graph_spec,
-                               self.env.M),
-            step=jnp.zeros((), jnp.int32),
+            agent_state=agent_state,
             metrics=metrics_init(),
         )
 
     # ------------------------------------------------------------- slot body
-    def _slot(self, carry: RolloutCarry, exit_mask=None, sp=None):
-        """One slot for all fleets. ``exit_mask=None`` uses the agent's own
-        mask; the sweep packer passes a per-cell mask (vmapped). ``sp`` is
-        the slot's ScenarioParams — per-fleet ([B]-leading) when the driver
-        was built with ``per_fleet_scenarios=True``, else shared."""
+    def _slot(self, carry: RolloutCarry, sp=None):
+        """One slot for all fleets. The agent's params and exit mask come
+        from ``carry.agent_state`` (the sweep packer batches whole states
+        over its cell axis). ``sp`` is the slot's ScenarioParams —
+        per-fleet ([B]-leading) when the driver was built with
+        ``per_fleet_scenarios=True``, else shared."""
         task_keys, task_subs = VecMECEnv.split_keys(carry.task_keys)
         dec_keys, dec_subs = VecMECEnv.split_keys(carry.dec_keys)
-        params, opt_state = carry.params, carry.opt_state
+        agent = carry.agent_state
 
         def fleet(env_state, wl_state, tk, dk, s):
             wl_state, tasks = self.workload.sample(wl_state, tk, s)
-            decision, q_best, g = self.agent._decide(
-                params, env_state, tasks, dk, exit_mask, s)
+            decision, q_best, g = self.adef.decide(agent, env_state, tasks,
+                                                   dk, s)
             new_state, result = self.env.step(env_state, tasks, decision, s)
             return wl_state, new_state, g, decision, result, q_best, \
                 tasks.active
@@ -167,26 +191,9 @@ class RolloutDriver:
          active) = jax.vmap(fleet, in_axes=(0, 0, 0, 0, sp_axis))(
             carry.env_state, carry.wl_state, task_subs, dec_subs, sp)
 
-        replay, train_key = carry.replay, carry.train_key
         loss = jnp.full((), jnp.nan, jnp.float32)
-        step = carry.step + 1
         if self.train:
-            replay = replay_add(replay, graphs, decisions)
-            train_key, tk = jax.random.split(carry.train_key)
-            due = ((step % self.train_every == 0)
-                   & (replay.size >= self.batch_size))
-
-            def do_train(op):
-                p, o, k = op
-                g, d = replay_sample(replay, k, self.batch_size)
-                return self.agent._train_step(p, o, g, d, exit_mask)
-
-            def skip(op):
-                p, o, _ = op
-                return p, o, jnp.full((), jnp.nan, jnp.float32)
-
-            params, opt_state, loss = jax.lax.cond(
-                due, do_train, skip, (params, opt_state, tk))
+            agent, loss = self.adef.absorb(agent, graphs, decisions)
 
         # dtype-normalized outputs: identical between scan and loop modes
         decisions = decisions.astype(jnp.int32)
@@ -201,15 +208,14 @@ class RolloutDriver:
                                  success=success, accuracy=accuracy,
                                  active=active, loss=loss)
         new_carry = RolloutCarry(env_state, wl_state, task_keys, dec_keys,
-                                 train_key, params, opt_state, replay, step,
-                                 metrics)
+                                 agent, metrics)
         out = RolloutTrace(decisions, reward, success, accuracy, active,
                            q_best, loss)
         return new_carry, out
 
     # -------------------------------------------------------------- episodes
     def run(self, key: jax.Array, n_slots: int, *, mode: str = "scan",
-            sp=None):
+            sp=None, agent_state=None):
         """Roll B fleets for ``n_slots``; returns (final carry, trace).
 
         ``mode="scan"`` compiles the whole episode; ``mode="loop"`` runs the
@@ -217,48 +223,49 @@ class RolloutDriver:
         ``sp`` overrides the env config's scenario knobs as traced data —
         pass a [B]-leading pytree (with ``per_fleet_scenarios=True``) for
         domain-randomized fleets; swapping ``sp`` values between calls
-        never recompiles.
+        never recompiles. ``agent_state`` starts the episode from an
+        explicit state (e.g. restored from a checkpoint or trained by a
+        previous run) instead of the shim's/fresh one.
         """
-        carry = self.init_carry(key, sp=sp)
+        carry = self.init_carry(key, agent_state=agent_state, sp=sp)
         if mode == "scan":
             return self._run_scan(carry, n_slots, sp=sp)
         if mode == "loop":
             outs = []
             for _ in range(n_slots):
-                carry, out = self._jit_slot(carry, None, sp)
+                carry, out = self._jit_slot(carry, sp)
                 outs.append(out)
             trace = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
             return carry, trace
         raise ValueError(f"unknown mode {mode!r}")
 
     def run_sharded(self, key: jax.Array, n_slots: int, *, mesh=None,
-                    sp=None):
+                    sp=None, agent_state=None):
         """Scan-fused episode with the fleet axis sharded across devices.
 
         Fleet-batched carry leaves (env/workload state, per-fleet RNG
-        streams) are split over the mesh's ``fleet`` axis; params, opt
-        state and the shared replay ring are replicated (the B-fleets ->
-        one-learner fan-in becomes a cross-device reduction XLA inserts at
-        the ``replay_add`` gather). ``mesh=None`` — e.g. from
+        streams) are split over the mesh's ``fleet`` axis; the
+        ``AgentState`` and metrics are replicated (the B-fleets ->
+        one-learner fan-in becomes a cross-device reduction XLA inserts
+        at the replay-add gather). ``mesh=None`` — e.g. from
         ``fleet_mesh()`` on a 1-device host — falls back to the plain
         ``run(..., mode="scan")`` path, so both paths compile the same
         episode body.
         """
         from repro.sharding.fleet import replicate, shard_leading_axis
         if mesh is None:
-            return self.run(key, n_slots, mode="scan", sp=sp)
+            return self.run(key, n_slots, mode="scan", sp=sp,
+                            agent_state=agent_state)
         if self.n_fleets % mesh.devices.size != 0:
             raise ValueError(
                 f"n_fleets={self.n_fleets} not divisible by "
                 f"{mesh.devices.size} devices")
-        carry = self.init_carry(key, sp=sp)
+        carry = self.init_carry(key, agent_state=agent_state, sp=sp)
         batched = dict(env_state=carry.env_state, wl_state=carry.wl_state,
                        task_keys=carry.task_keys, dec_keys=carry.dec_keys)
         batched = shard_leading_axis(batched, mesh)
         rest = replicate(
-            dict(train_key=carry.train_key, params=carry.params,
-                 opt_state=carry.opt_state, replay=carry.replay,
-                 step=carry.step, metrics=carry.metrics), mesh)
+            dict(agent_state=carry.agent_state, metrics=carry.metrics), mesh)
         carry = RolloutCarry(**batched, **rest)
         # per-fleet scenarios ride the fleet axis; a shared sp replicates
         if sp is not None:
@@ -270,16 +277,24 @@ class RolloutDriver:
         fn = self._scan_cache.get(n_slots)
         if fn is None:
             def episode(c, s):
-                return jax.lax.scan(lambda c_, _: self._slot(c_, None, s),
+                return jax.lax.scan(lambda c_, _: self._slot(c_, s),
                                     c, None, length=n_slots)
             fn = jax.jit(episode)
             self._scan_cache[n_slots] = fn
         return fn(carry, sp)
 
     def sync_agent(self, carry: RolloutCarry) -> None:
-        """Write learned params/optimizer back into the interactive agent."""
-        self.agent.params = carry.params
-        self.agent.opt_state = carry.opt_state
+        """Write the learned ``AgentState`` back into the legacy shim.
+
+        Only meaningful when the driver was built from an
+        ``OffloadingAgent``; with a pure ``AgentDef``,
+        ``carry.agent_state`` *is* the result — keep it.
+        """
+        if self._shim is None:
+            raise ValueError(
+                "driver was built from an AgentDef; carry.agent_state is "
+                "the trained state — thread it explicitly")
+        self._shim.state = carry.agent_state
 
 
 def carry_metrics(carry: RolloutCarry, *, slot_s: float,

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent import make_agent
+from repro.core.policy import AgentState, agent_def
 from repro.mec.config import MECConfig, ScenarioParams
 from repro.mec.env import MECEnv
 from repro.mec.scenarios import SCENARIOS
@@ -125,8 +125,13 @@ class EdgeServingEngine:
         self._workload = make_workload(self.env)
         self._wl_state = self._workload.init(jax.random.fold_in(key, 1))
         self._req_rng = np.random.default_rng(seed)
-        self.agent = (make_agent(scheduler, self.env, key, seed=seed)
-                      if scheduler else None)
+        # pure-functional scheduler: the def is static structure, the
+        # state is one hot-swappable pytree (see get/set_agent_state)
+        self.agent_def = agent_def(scheduler, self.env) if scheduler else None
+        self.agent_state = (self.agent_def.init(key)
+                            if self.agent_def is not None else None)
+        self._agent_step = (jax.jit(self.agent_def.step)
+                            if self.agent_def is not None else None)
         self.metrics = RunningMetrics(slot_s=mec_cfg.slot_s)
 
         # one compiled decode step per (replica, exit) — exit is static
@@ -177,6 +182,34 @@ class EdgeServingEngine:
                 raise ValueError(f"exit table shape {got} != engine {want}")
         self._sp = sp
 
+    def get_agent_state(self) -> Optional[AgentState]:
+        """The scheduler's live ``AgentState`` (params, opt state, replay
+        ring, RNG, counters) — checkpoint it, train it offline in a
+        ``RolloutDriver``, or inspect it. ``None`` without a scheduler."""
+        return self.agent_state
+
+    def set_agent_state(self, state: AgentState) -> None:
+        """Hot-swap the scheduler's entire mutable state.
+
+        Mirrors ``set_scenario_params``: the state is traced data in the
+        compiled step, so swapping in a checkpointed or freshly-trained
+        ``AgentState`` (same structure/shapes) never recompiles. Raises
+        without a scheduler or on a structure mismatch.
+        """
+        if self.agent_def is None:
+            raise ValueError("engine has no scheduler agent")
+        want = jax.tree_util.tree_structure(self.agent_state)
+        got = jax.tree_util.tree_structure(state)
+        if want != got:
+            raise ValueError(f"AgentState structure {got} != engine {want}")
+        for a, b in zip(jax.tree_util.tree_leaves(self.agent_state),
+                        jax.tree_util.tree_leaves(state)):
+            if jnp.shape(a) != jnp.shape(b):
+                raise ValueError(
+                    f"AgentState leaf shape {jnp.shape(b)} != engine "
+                    f"{jnp.shape(a)}")
+        self.agent_state = state
+
     def make_request(self, prompt_len: int = 8, max_new: int = 8) -> Request:
         """Synthetic request for arrival-driven serving."""
         toks = self._req_rng.integers(0, self.cfg.vocab, prompt_len)
@@ -211,8 +244,9 @@ class EdgeServingEngine:
                 act = np.zeros((self.batch_slots,), np.float32)
                 act[: len(requests)] = 1.0
                 tasks = tasks._replace(active=jnp.asarray(act))
-        if self.agent is not None:
-            decision, _ = self.agent.act(self.mec_state, tasks, sp=self._sp)
+        if self.agent_def is not None:
+            self.agent_state, decision, _ = self._agent_step(
+                self.agent_state, self.mec_state, tasks, None, self._sp)
         else:  # static: final exit, round-robin replica
             L = self.env.L
             decision = jnp.asarray(

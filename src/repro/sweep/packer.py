@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Tuple
 
-from repro.core.agent import actor_family
+from repro.core.policy import actor_family
 from repro.mec.scenarios import make_scenario
 from repro.sweep.spec import Cell
 

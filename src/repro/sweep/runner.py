@@ -1,15 +1,17 @@
 """Execute sweep cells: packed + sharded by default, per-cell as reference.
 
-``run_pack`` is the mega-batch path: one template env/agent/driver per
-pack (the traced structure), per-cell params / exit masks / RNG streams /
-``ScenarioParams`` as batched data along the leading cell axis [C], the
-whole episode vmapped over that axis inside one ``lax.scan`` and sharded
-over available devices (``sharding.fleet``; a 1-device host runs the
-identical program without the placement). Because scenario knobs are
-data, one pack may mix scenarios — a 4-method x S-seed x K-scenario grid
-is 2 compiles total. Per-cell metrics come from the driver's
-device-resident accumulator, so the only host transfer is a handful of
-scalars per cell at the very end.
+``run_pack`` is the mega-batch path: one template env/``AgentDef``/driver
+per pack (the traced structure), per-cell ``AgentState``s — built with
+``jax.vmap(def_.init)`` over the cell axis [C], each cell's exit mask
+swapped in as data — plus per-cell RNG streams and ``ScenarioParams``
+batched along the same axis, the whole episode vmapped over [C] inside
+one ``lax.scan`` and sharded over available devices (``sharding.fleet``;
+a 1-device host runs the identical program without the placement).
+Because both scenario knobs *and* the exit mask are agent-state data,
+one pack mixes scenarios and methods of one actor family — a 4-method x
+S-seed x K-scenario grid is 2 compiles total. Per-cell metrics come from
+the driver's device-resident accumulator, so the only host transfer is a
+handful of scalars per cell at the very end.
 
 ``run_cell`` is the sequential reference: an ordinary ``RolloutDriver``
 run for one cell, sharing the exact seed derivation (``cell_keys``) —
@@ -26,8 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent import (METHOD_SPECS, OffloadingAgent, init_params,
-                              make_exit_mask)
+from repro.core.policy import AgentDef, agent_def
 from repro.mec.env import MECEnv
 from repro.mec.scenarios import make_scenario
 from repro.rollout.driver import RolloutDriver, carry_metrics
@@ -44,17 +45,15 @@ def _scenario_env(cell: Cell) -> MECEnv:
     return MECEnv(cfg)
 
 
-def _template_driver(cell: Cell, family: str):
-    """Shared traced structure for every cell in a pack. The template's
-    own params/mask/scenario knobs are never used — they are replaced per
-    cell (the pack signature guarantees the *structure* matches)."""
-    env = _scenario_env(cell)
-    agent = OffloadingAgent(env, jax.random.PRNGKey(0), actor=family,
-                            early_exit=True,
-                            buffer_size=cell.replay_capacity,
-                            batch_size=cell.batch_size,
-                            train_every=cell.train_every)
-    return env, agent, RolloutDriver(agent, n_fleets=cell.n_fleets)
+def _cell_def(cell: Cell, env: MECEnv, *, method: Optional[str] = None,
+              actor: Optional[str] = None) -> AgentDef:
+    """The cell's agent spec; ``actor=`` builds the pack-template def
+    (family only — per-cell exit masks are swapped in as state data)."""
+    kw = dict(buffer_size=cell.replay_capacity, batch_size=cell.batch_size,
+              train_every=cell.train_every)
+    if actor is not None:
+        return AgentDef(env=env, actor=actor, **kw)
+    return agent_def(method or cell.method, env, **kw)
 
 
 def _finish_row(row: dict, cell: Cell) -> dict:
@@ -71,25 +70,27 @@ def _finish_row(row: dict, cell: Cell) -> dict:
 class PackProgram:
     """One pack's compiled episode + its batched inputs.
 
-    Construction builds the template driver, per-cell data and the jitted
-    episode; ``run()`` executes it. Re-running the same program reuses the
-    compile cache, so a second ``run()`` is the steady-state (resumed
-    sweep) rate — which is what ``benchmarks/sweep_throughput.py`` times
-    as ``packed_warm``.
+    Construction builds the template def/driver, per-cell ``AgentState``s
+    and the jitted episode; ``run()`` executes it. Re-running the same
+    program reuses the compile cache, so a second ``run()`` is the
+    steady-state (resumed sweep) rate — which is what
+    ``benchmarks/sweep_throughput.py`` times as ``packed_warm``.
     """
 
     def __init__(self, pack: Pack, *, mesh=None):
         self.pack = pack
         cells = list(pack.cells)
         ref = cells[0]
-        env, agent, drv = _template_driver(ref, pack.family)
+        env = _scenario_env(ref)
+        adef = _cell_def(ref, env, actor=pack.family)
+        drv = RolloutDriver(adef, n_fleets=ref.n_fleets)
         self._env = env
 
         pkeys = jnp.stack([cell_keys(c)[0] for c in cells])
         rkeys = jnp.stack([cell_keys(c)[1] for c in cells])
-        masks = jnp.stack([
-            make_exit_mask(env.N, env.L, METHOD_SPECS[c.method]["early_exit"])
-            for c in cells])
+        # per-cell exit masks (GRLE vs GRL, DROOE vs DROO) are AgentState
+        # data — methods of one family differ only by state
+        masks = jnp.stack([_cell_def(c, env).exit_mask() for c in cells])
         # each cell's scenario knobs, stacked along the cell axis — this
         # is what lets one compiled episode serve a mixed-scenario pack
         sps = jax.tree_util.tree_map(
@@ -105,18 +106,16 @@ class PackProgram:
             pkeys, rkeys, masks = rep(pkeys), rep(rkeys), rep(masks)
             sps = jax.tree_util.tree_map(rep, sps)
 
-        params = jax.vmap(lambda k: init_params(pack.family, env, k))(pkeys)
-        opt_states = jax.vmap(agent.opt.init)(params)
+        states = jax.vmap(
+            lambda k, m: adef.init(k)._replace(exit_mask=m))(pkeys, masks)
         carries = jax.vmap(
-            lambda k, p, o, s: drv.init_carry(k, params=p, opt_state=o,
-                                              sp=s))(
-            rkeys, params, opt_states, sps)
-        self._carries, self._masks, self._sps = shard_leading_axis(
-            (carries, masks, sps), mesh)
+            lambda k, st, s: drv.init_carry(k, agent_state=st, sp=s))(
+            rkeys, states, sps)
+        self._carries, self._sps = shard_leading_axis((carries, sps), mesh)
 
-        def episode(cs, ms, ss):
+        def episode(cs, ss):
             def step(c, _):
-                new_c, _ = jax.vmap(drv._slot)(c, ms, ss)
+                new_c, _ = jax.vmap(drv._slot)(c, ss)
                 return new_c, None
 
             final, _ = jax.lax.scan(step, cs, None, length=ref.n_slots)
@@ -128,7 +127,7 @@ class PackProgram:
 
     def run(self) -> list:
         """Execute the episode; one metrics row per cell, in pack order."""
-        metrics = self._episode(self._carries, self._masks, self._sps)
+        metrics = self._episode(self._carries, self._sps)
         metrics = {k: np.asarray(v) for k, v in metrics.items()}
         rows = []
         for i, cell in enumerate(self.pack.cells):
@@ -150,14 +149,10 @@ def run_cell(cell: Cell) -> dict:
     """One cell through a plain ``RolloutDriver`` (reference/baseline)."""
     env = _scenario_env(cell)
     pkey, rkey = cell_keys(cell)
-    spec = METHOD_SPECS[cell.method]
-    agent = OffloadingAgent(env, pkey, actor=spec["actor"],
-                            early_exit=spec["early_exit"],
-                            buffer_size=cell.replay_capacity,
-                            batch_size=cell.batch_size,
-                            train_every=cell.train_every)
-    drv = RolloutDriver(agent, n_fleets=cell.n_fleets)
-    carry, _ = drv.run(rkey, cell.n_slots, mode="scan")
+    adef = _cell_def(cell, env)
+    drv = RolloutDriver(adef, n_fleets=cell.n_fleets)
+    carry, _ = drv.run(rkey, cell.n_slots, mode="scan",
+                       agent_state=adef.init(pkey))
     row = carry_metrics(carry, slot_s=env.cfg.slot_s,
                         n_fleets=cell.n_fleets)
     return _finish_row(row, cell)

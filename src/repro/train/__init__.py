@@ -6,10 +6,16 @@ from repro.train.steps import (
     make_prefill_step,
     chunked_ce_loss,
 )
-from repro.train.checkpoint import save_checkpoint, restore_checkpoint
+from repro.train.checkpoint import (
+    restore_agent_state,
+    restore_checkpoint,
+    save_agent_state,
+    save_checkpoint,
+)
 
 __all__ = [
     "TrainState", "make_train_state", "make_train_step", "make_serve_step",
     "make_prefill_step", "chunked_ce_loss",
     "save_checkpoint", "restore_checkpoint",
+    "save_agent_state", "restore_agent_state",
 ]

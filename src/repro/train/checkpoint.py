@@ -2,6 +2,13 @@
 
 ``zstandard`` is optional: environments without it fall back to zlib.
 ``restore_checkpoint`` sniffs the zstd magic so either format reads back.
+
+Arbitrary pytrees of arrays round-trip (dicts, tuples, NamedTuples) —
+including a full ``repro.core.AgentState``, for which
+``save_agent_state``/``restore_agent_state`` are the typed entry points:
+params, optimizer moments, the device replay ring's contents and
+pointers, the RNG key and the slot counter all serialize, so a killed
+training run resumes bit-exactly (tested in ``tests/test_policy.py``).
 """
 from __future__ import annotations
 
@@ -96,3 +103,26 @@ def restore_checkpoint(path: str, like=None):
     rec("", like)
     leaves = [arrays[p] for p in order]
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ----------------------------------------------------------- agent states
+def save_agent_state(path: str, state, *, level: int = 3) -> None:
+    """Serialize a full ``repro.core.AgentState`` — every mutable piece
+    of Algorithm 1 (params, opt state, replay ring incl. ptr/size, RNG
+    key, slot counter, exit mask, loss stats), not just param pytrees."""
+    save_checkpoint(path, state, level=level)
+
+
+def restore_agent_state(path: str, like):
+    """Restore an ``AgentState`` saved by ``save_agent_state``.
+
+    ``like`` supplies the pytree structure: either an ``AgentDef``
+    (its ``init`` builds a structural template; the stored leaves
+    replace every value) or an example ``AgentState``. Restored state
+    continues bit-exactly: same decisions, same minibatch draws, same
+    parameter trajectory as the uninterrupted run.
+    """
+    from repro.core.policy import AgentDef
+    if isinstance(like, AgentDef):
+        like = like.init(jax.random.PRNGKey(0))
+    return restore_checkpoint(path, like=like)

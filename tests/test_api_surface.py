@@ -1,0 +1,84 @@
+"""Public-API snapshot: ``repro.core``'s surface and the AgentDef/
+AgentState signatures are pinned, and the scaling subsystems go through
+them (no reaching into ``OffloadingAgent`` internals)."""
+import dataclasses
+import inspect
+import pathlib
+
+import repro.core as core
+from repro.core import AgentDef, AgentState, StepAux
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+# ------------------------------------------------------------------ __all__
+def test_core_all_snapshot():
+    assert core.__all__ == [
+        "MECGraph", "build_graph", "pad_graph",
+        "one_hot_candidates", "binary_order_preserving", "max_candidates",
+        "ReplayBuffer",
+        "DeviceReplay", "replay_init", "replay_add", "replay_sample",
+        "AgentDef", "AgentState", "StepAux", "agent_def",
+        "METHOD_SPECS", "actor_family", "init_params", "make_exit_mask",
+        "OffloadingAgent", "make_agent",
+    ]
+    for name in core.__all__:
+        assert hasattr(core, name), name
+
+
+# --------------------------------------------------------------- signatures
+def _params(fn):
+    return list(inspect.signature(fn).parameters)
+
+
+def test_agent_def_signatures():
+    assert _params(AgentDef.init) == ["self", "key"]
+    assert _params(AgentDef.decide) == [
+        "self", "state", "mec_state", "tasks", "key", "sp"]
+    assert _params(AgentDef.train_step) == ["self", "state"]
+    assert _params(AgentDef.absorb) == [
+        "self", "state", "graphs", "decisions"]
+    assert _params(AgentDef.step) == [
+        "self", "state", "mec_state", "tasks", "key", "sp"]
+    assert _params(core.agent_def) == ["method", "env", "kw"]
+
+
+def test_agent_def_static_fields_and_defaults():
+    fields = {f.name: f for f in dataclasses.fields(AgentDef)}
+    assert list(fields) == [
+        "env", "actor", "early_exit", "hidden", "n_candidates", "n_random",
+        "buffer_size", "batch_size", "train_every", "lr"]
+    # §VI-A defaults: replay 128, minibatch 64, train cadence ω=10, Adam 1e-3
+    assert fields["buffer_size"].default == 128
+    assert fields["batch_size"].default == 64
+    assert fields["train_every"].default == 10
+    assert fields["lr"].default == 1e-3
+    assert fields["n_random"].default == 16
+    assert AgentDef.__dataclass_params__.frozen
+
+
+def test_agent_state_fields():
+    assert AgentState._fields == (
+        "params", "opt_state", "replay", "key", "step", "exit_mask",
+        "last_loss", "loss_sum", "loss_count")
+    assert StepAux._fields == ("q_est", "loss")
+
+
+def test_method_specs_cover_paper_rows():
+    assert set(core.METHOD_SPECS) == {"grle", "grl", "drooe", "droo"}
+    assert core.actor_family("grle") == "gcn"
+    assert core.actor_family("droo") == "mlp"
+
+
+# ------------------------------------------------- no-internals acceptance
+def test_subsystems_use_only_the_pure_api():
+    """Driver, sweep runner and serve engine must not reach into the
+    legacy agent's internals — all agent access goes through
+    ``AgentDef``/``AgentState``."""
+    banned = ("init_params", "make_exit_mask", "_decide", "_exit_mask",
+              "OffloadingAgent(")
+    for rel in ("rollout/driver.py", "sweep/runner.py", "sweep/packer.py",
+                "serve/engine.py"):
+        text = (SRC / rel).read_text()
+        for token in banned:
+            assert token not in text, f"{rel} references {token}"

@@ -116,8 +116,11 @@ def test_replay_ring(key):
 
 # ---------------------------------------------------------------------- agent
 def test_agent_trains_and_loss_decreases(key):
+    # batch_size=8: training is gated on a full minibatch everywhere
+    # (the unified AgentDef.step rule), so the ring must fill within the
+    # 60-slot horizon for the cadence (every 10 slots) to fire
     env = MECEnv(MECConfig(n_devices=6))
-    agent = make_agent("grle", env, key)
+    agent = make_agent("grle", env, key, batch_size=8)
     state = env.reset()
     k = key
     for _ in range(60):

@@ -1,0 +1,237 @@
+"""Pure-functional agent API: shim equivalence, unified train gating,
+host/driver equivalence, full-AgentState checkpoint resume, serve
+hot-swap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AgentDef, AgentState, OffloadingAgent, agent_def
+from repro.mec import MECEnv, make_scenario
+from repro.rollout import RolloutDriver, VecMECEnv
+from repro.train import restore_agent_state, save_agent_state
+
+AGENT_KW = dict(buffer_size=32, batch_size=8, train_every=5)
+
+
+def _env(scenario="fig5_baseline", m=3):
+    return MECEnv(make_scenario(scenario, n_devices=m))
+
+
+def _drive_pure(adef, env, key, n_slots):
+    """Self-contained host loop on the pure API; returns full history."""
+    state = adef.init(key)
+    step = jax.jit(adef.step)
+    mec = env.reset()
+    decisions, losses = [], []
+    for i in range(n_slots):
+        tasks = env.sample_slot(jax.random.fold_in(key, 100 + i))
+        state, dec, aux = step(state, mec, tasks, None, None)
+        mec, _ = env.step(mec, tasks, dec)
+        decisions.append(np.asarray(dec))
+        losses.append(float(aux.loss))
+    return state, np.stack(decisions), np.asarray(losses)
+
+
+# ----------------------------------------------------------- shim equivalence
+class TestShimEquivalence:
+    """Satellite: legacy ``OffloadingAgent.act`` == pure ``AgentDef.step``
+    under fixed seeds — all four methods on two named scenarios."""
+
+    @pytest.mark.parametrize("scenario", ["fig5_baseline", "fig8_csi"])
+    @pytest.mark.parametrize("method", ["grle", "grl", "drooe", "droo"])
+    def test_act_matches_step(self, method, scenario, key):
+        env = _env(scenario)
+        adef = agent_def(method, env, **AGENT_KW)
+        state_p, dec_p, loss_p = _drive_pure(adef, env, key, 20)
+
+        with pytest.warns(DeprecationWarning):
+            from repro.core import make_agent
+            shim = make_agent(method, env, key, **AGENT_KW)
+        mec = env.reset()
+        dec_s, loss_s = [], []
+        for i in range(20):
+            tasks = env.sample_slot(jax.random.fold_in(key, 100 + i))
+            dec, info = shim.act(mec, tasks)
+            mec, _ = env.step(mec, tasks, dec)
+            dec_s.append(np.asarray(dec))
+            loss_s.append(info.get("loss", np.nan))
+
+        np.testing.assert_array_equal(dec_p, np.stack(dec_s))
+        np.testing.assert_allclose(loss_p, np.asarray(loss_s), rtol=1e-6)
+        for a, b in zip(jax.tree_util.tree_leaves(state_p.params),
+                        jax.tree_util.tree_leaves(shim.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shim_warns_once_per_construction(self, key):
+        env = _env()
+        with pytest.warns(DeprecationWarning, match="OffloadingAgent"):
+            OffloadingAgent(env, key)
+
+
+# --------------------------------------------------------------- train gating
+class TestTrainGating:
+    """Satellite: one rule everywhere — train every ``train_every`` slots
+    but only once the ring holds a full minibatch (the old host path's
+    len(replay) >= 2 shortcut is gone)."""
+
+    def test_host_waits_for_full_minibatch(self, key):
+        env = _env()
+        adef = agent_def("grle", env, buffer_size=32, batch_size=12,
+                         train_every=5)
+        _, _, losses = _drive_pure(adef, env, key, 30)
+        trained = np.flatnonzero(np.isfinite(losses)) + 1   # 1-indexed slots
+        # due at multiples of 5, but slots 5 and 10 hold < 12 entries
+        np.testing.assert_array_equal(trained, [15, 20, 25, 30])
+
+    def test_state_loss_stats_track_training(self, key):
+        env = _env()
+        adef = agent_def("grle", env, **AGENT_KW)
+        state, _, losses = _drive_pure(adef, env, key, 25)
+        finite = losses[np.isfinite(losses)]
+        assert int(state.loss_count) == len(finite) > 0
+        np.testing.assert_allclose(float(state.loss_sum), finite.sum(),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(state.last_loss), finite[-1],
+                                   rtol=1e-6)
+
+    def test_driver_matches_host_step(self, key):
+        """Host ``AgentDef.step`` (explicit keys) reproduces the B=1
+        driver episode — decisions bitwise, losses/params to float32
+        rounding — so loop, scan, and host share one slot body."""
+        env = _env(m=4)
+        adef = agent_def("grle", env, **AGENT_KW)
+        drv = RolloutDriver(adef, n_fleets=1)
+        run_key = jax.random.PRNGKey(13)
+        final, trace = drv.run(run_key, 30, mode="scan")
+
+        carry = drv.init_carry(run_key)
+        state_a = carry.agent_state
+        task_keys, dec_keys = carry.task_keys, carry.dec_keys
+        mec = env.reset()
+        step = jax.jit(adef.step)
+        for k in range(30):
+            task_keys, tsub = VecMECEnv.split_keys(task_keys)
+            dec_keys, dsub = VecMECEnv.split_keys(dec_keys)
+            tasks = env.sample_slot(tsub[0])
+            state_a, dec, aux = step(state_a, mec, tasks, dsub[0], None)
+            mec, _ = env.step(mec, tasks, dec)
+            np.testing.assert_array_equal(np.asarray(trace.decisions[k, 0]),
+                                          np.asarray(dec))
+            np.testing.assert_allclose(np.asarray(trace.loss[k]),
+                                       np.asarray(aux.loss), rtol=1e-5)
+        assert int(state_a.step) == int(final.agent_state.step) == 30
+        for a, b in zip(jax.tree_util.tree_leaves(state_a.params),
+                        jax.tree_util.tree_leaves(final.agent_state.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-6)
+
+
+# ----------------------------------------------------------------- checkpoint
+class TestCheckpointResume:
+    """Satellite: a killed run restored from a full-``AgentState``
+    checkpoint continues bit-identically to the uninterrupted run."""
+
+    def test_bit_exact_resume_after_50_slots(self, tmp_path, key):
+        env = _env(m=4)
+        adef = agent_def("grle", env, **AGENT_KW)
+        step = jax.jit(adef.step)
+
+        def advance(state, mec, start, n):
+            decs = []
+            for i in range(start, start + n):
+                tasks = env.sample_slot(jax.random.fold_in(key, 500 + i))
+                state, dec, _ = step(state, mec, tasks, None, None)
+                mec, _ = env.step(mec, tasks, dec)
+                decs.append(np.asarray(dec))
+            return state, mec, np.stack(decs)
+
+        state, mec, _ = advance(adef.init(key), env.reset(), 0, 30)
+        path = str(tmp_path / "agent.ckpt")
+        save_agent_state(path, state)
+
+        # uninterrupted continuation
+        ref_state, _, ref_decs = advance(state, mec, 30, 50)
+        # killed + restored continuation
+        restored = restore_agent_state(path, adef)
+        res_state, _, res_decs = advance(restored, mec, 30, 50)
+
+        np.testing.assert_array_equal(ref_decs, res_decs)
+        for a, b in zip(jax.tree_util.tree_leaves(ref_state),
+                        jax.tree_util.tree_leaves(res_state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_roundtrip_preserves_every_leaf(self, tmp_path, key):
+        env = _env()
+        adef = agent_def("drooe", env, **AGENT_KW)
+        state, _, _ = _drive_pure(adef, env, key, 12)
+        path = str(tmp_path / "state.ckpt")
+        save_agent_state(path, state)
+        restored = restore_agent_state(path, adef)
+        assert isinstance(restored, AgentState)
+        la, lb = (jax.tree_util.tree_leaves(state),
+                  jax.tree_util.tree_leaves(restored))
+        assert len(la) == len(lb)
+        for a, b in zip(la, lb):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # replay ring pointers and slot counter survive — not just params
+        assert int(restored.replay.size) == int(state.replay.size) > 0
+        assert int(restored.step) == 12
+
+
+# -------------------------------------------------------------- driver resume
+class TestDriverAgentState:
+    def test_run_accepts_explicit_state(self, key):
+        """An episode started from a trained ``AgentState`` differs from a
+        fresh one only through the params (same episode key schedule)."""
+        env = _env(m=4)
+        adef = agent_def("grle", env, **AGENT_KW)
+        drv = RolloutDriver(adef, n_fleets=2)
+        c1, _ = drv.run(jax.random.PRNGKey(3), 20)
+        trained = c1.agent_state
+        c2, _ = drv.run(jax.random.PRNGKey(4), 10, agent_state=trained)
+        # params carried over into the new episode, counters reset
+        assert int(c2.agent_state.step) == 10
+        drv_eval = RolloutDriver(adef, n_fleets=2, train=False)
+        c3, _ = drv_eval.run(jax.random.PRNGKey(4), 10, agent_state=trained)
+        for a, b in zip(jax.tree_util.tree_leaves(c3.agent_state.params),
+                        jax.tree_util.tree_leaves(trained.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_sync_agent_requires_shim(self, key):
+        env = _env()
+        adef = agent_def("grle", env, **AGENT_KW)
+        drv = RolloutDriver(adef, n_fleets=1)
+        carry, _ = drv.run(key, 5)
+        with pytest.raises(ValueError, match="AgentDef"):
+            drv.sync_agent(carry)
+
+
+# --------------------------------------------------------------- serve engine
+class TestServeHotSwap:
+    def test_get_set_agent_state(self, key):
+        from repro.configs import get_arch
+        from repro.serve import EdgeServingEngine, Replica
+        cfg = get_arch("qwen1_5_0_5b", reduced=True)
+        eng = EdgeServingEngine(cfg, [Replica("a"), Replica("b", 0.5)],
+                                batch_slots=3, key=key)
+        eng.serve_slot()
+        live = eng.get_agent_state()
+        assert isinstance(live, AgentState)
+        assert int(live.step) >= 1
+        # train the same def shape offline and hot-swap the result in
+        fresh = eng.agent_def.init(jax.random.fold_in(key, 7))
+        eng.set_agent_state(fresh)
+        assert int(eng.get_agent_state().step) == 0
+        eng.serve_slot()
+        assert int(eng.get_agent_state().step) == 1
+
+    def test_set_agent_state_rejects_mismatch(self, key):
+        from repro.configs import get_arch
+        from repro.serve import EdgeServingEngine, Replica
+        cfg = get_arch("qwen1_5_0_5b", reduced=True)
+        eng = EdgeServingEngine(cfg, [Replica("a")], batch_slots=2, key=key)
+        other_def = agent_def("grle", _env(m=2))
+        with pytest.raises(ValueError):
+            eng.set_agent_state(other_def.init(key))
