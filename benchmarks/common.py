@@ -60,6 +60,55 @@ def save_rows(name: str, rows) -> str:
     return path
 
 
+def merge_bench_rows(path: str, new_rows) -> None:
+    """Refresh only the rows whose names ``new_rows`` re-measured,
+    preserving every other row of the committed BENCH_*.json."""
+    names = {r["name"] for r in new_rows}
+    kept = []
+    if os.path.exists(path):
+        with open(path) as f:
+            kept = [r for r in json.load(f) if r.get("name") not in names]
+    with open(path, "w") as f:
+        json.dump(kept + new_rows, f, indent=1)
+
+
+def assert_two_compile_packs(scenarios: str, seeds: int, *, n_devices=4,
+                             n_slots=20, replay_capacity=16, batch_size=4,
+                             train_every=5):
+    """The compile-count acceptance guard, shared by the sweep and actor
+    benchmarks: a full 4-method x seeds x scenarios grid must pack into
+    exactly 2 compiled programs (one per actor family — exit masks and
+    scenario knobs are agent-state data). Executes both packs twice and,
+    where jax exposes ``_cache_size``, pins one compile per program.
+    Returns (packs, cells)."""
+    from repro.sweep import SweepSpec, pack_cells
+    from repro.sweep.runner import PackProgram
+
+    spec = SweepSpec.from_names(scenarios, "grle,grl,drooe,droo", seeds,
+                                n_devices=n_devices, n_slots=n_slots,
+                                replay_capacity=replay_capacity,
+                                batch_size=batch_size,
+                                train_every=train_every)
+    cells = spec.expand()
+    packs = pack_cells(cells)
+    assert len(packs) == 2, [p.label() for p in packs]
+    assert {p.family for p in packs} == {"gcn", "mlp"}
+    k = len(spec.scenarios)
+    assert sum(len(p.cells) for p in packs) == len(cells) == 4 * seeds * k
+    for pack in packs:
+        prog = PackProgram(pack)
+        prog.run()
+        prog.run()                 # warm re-run must reuse the cache
+        # _cache_size is jax-internal; when present, pin the stronger
+        # claim (one compile per program) without letting a jax upgrade
+        # break the guard itself
+        cache_size = getattr(prog._episode, "_cache_size", None)
+        if cache_size is not None:
+            n = cache_size()
+            assert n == 1, f"{pack.label()} compiled {n} episodes"
+    return packs, cells
+
+
 def print_csv(name: str, rows, keys) -> None:
     print(f"# {name}")
     print(",".join(["name"] + list(keys)))

@@ -36,7 +36,8 @@ import time
 
 import jax
 
-from benchmarks.common import save_rows
+from benchmarks.common import (assert_two_compile_packs, merge_bench_rows,
+                               save_rows)
 from repro.sharding.fleet import fleet_mesh
 from repro.sweep import SweepSpec, pack_cells, run_cell
 from repro.sweep.runner import PackProgram
@@ -145,29 +146,12 @@ def run_guard(rows):
     ``AgentState`` (data) and scenario knobs in ``ScenarioParams``
     (data), the only compile-splitting key left is the actor family.
     Executes both packs on a tiny grid and asserts each ``PackProgram``
-    episode compiled exactly once.
+    episode compiled exactly once (shared guard:
+    ``benchmarks.common.assert_two_compile_packs``).
     """
     seeds, k = 2, 4
     scenarios = "fig5_baseline,fig6_capacity,fig7_jitter,fig8_csi"
-    spec = SweepSpec.from_names(scenarios, "grle,grl,drooe,droo", seeds,
-                                n_devices=4, n_slots=20, replay_capacity=16,
-                                batch_size=4, train_every=5)
-    cells = spec.expand()
-    packs = pack_cells(cells)
-    assert len(packs) == 2, [p.label() for p in packs]
-    assert {p.family for p in packs} == {"gcn", "mlp"}
-    assert sum(len(p.cells) for p in packs) == len(cells) == 4 * seeds * k
-    for pack in packs:
-        prog = PackProgram(pack)
-        prog.run()
-        prog.run()                 # warm re-run must reuse the cache
-        # _cache_size is jax-internal; when present, pin the stronger
-        # claim (one compile per program) without letting a jax upgrade
-        # break the guard itself
-        cache_size = getattr(prog._episode, "_cache_size", None)
-        if cache_size is not None:
-            n = cache_size()
-            assert n == 1, f"{pack.label()} compiled {n} episodes"
+    packs, cells = assert_two_compile_packs(scenarios, seeds)
     compiles = len(packs)
     row = {"name": "sweep/pack_guard", "packs": len(packs),
            "compiled_programs": compiles, "cells": len(cells),
@@ -183,14 +167,7 @@ def run_guard(rows):
 def _merge_guard_into_bench(rows) -> None:
     """Refresh only the guard rows of the committed BENCH_sweep.json."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    path = os.path.join(root, "BENCH_sweep.json")
-    kept = []
-    if os.path.exists(path):
-        with open(path) as f:
-            kept = [r for r in json.load(f)
-                    if r.get("name") != "sweep/pack_guard"]
-    with open(path, "w") as f:
-        json.dump(kept + rows, f, indent=1)
+    merge_bench_rows(os.path.join(root, "BENCH_sweep.json"), rows)
 
 
 def run(quick: bool = False, mixed_only: bool = False,

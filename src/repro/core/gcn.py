@@ -1,4 +1,4 @@
-"""Two-layer bipartite GCN actor (paper Eq. 12–14).
+"""Two-layer bipartite GCN actor (paper Eq. 12–14), batch-native.
 
 Aggregation ``A`` is a degree-normalized weighted mean over neighbors,
 ``C`` is concatenation, exactly as Eq. 12 with ReLU. Hidden widths default
@@ -6,16 +6,24 @@ to the paper's (128, 64). The edge scorer (Eq. 13–14) is
 ``sigmoid(MLP2(relu(MLP1([h_src ‖ h_dst]))))``; we implement the concat+
 linear as the sum of two projections (mathematically identical, avoids
 materializing the [M, O, 2H] tensor and maps onto clean MXU tiles).
+
+Every public function accepts arbitrary leading batch axes over the
+``MECGraph`` leaves (``[..., M, F]``): a replay minibatch, a fleet, a
+packed sweep's cell axis, or no batch at all (the per-slot decide path)
+all run the same code. Compute dispatches through the kernel layer —
+``repro.kernels.ops.gcn_agg`` for Eq-12 message passing and
+``repro.kernels.ops.edge_score`` for the Eq-13/14 edge MLP (Pallas on
+TPU, jnp reference elsewhere; ``use_pallas`` overrides the backend
+auto-detection).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.nn import Linear
 from repro.core.graph import MECGraph
-
-_EPS = 1e-6
 
 
 def init(key, dev_dim: int, opt_dim: int, *, hidden=(128, 64),
@@ -39,42 +47,71 @@ def init(key, dev_dim: int, opt_dim: int, *, hidden=(128, 64),
     }
 
 
-def _aggregate(adj, feats):
-    """Degree-normalized weighted mean: [A, B] x [B, F] -> [A, F]."""
-    deg = adj.sum(axis=-1, keepdims=True)
-    return (adj @ feats) / (deg + _EPS)
+def _split(p: dict, f_self: int):
+    """Concat-linear [f_self + f_nbr, H] -> (w_self, w_nbr, bias)."""
+    w = p["w"]
+    return w[:f_self], w[f_self:], p["b"]
 
 
-def _layer(p_dev, p_opt, adj, h_dev, h_opt):
-    agg_d = _aggregate(adj, h_opt)               # device <- options
-    agg_o = _aggregate(adj.T, h_dev)             # option <- devices
-    new_dev = jax.nn.relu(Linear.apply(p_dev, jnp.concatenate([h_dev, agg_d], -1)))
-    new_opt = jax.nn.relu(Linear.apply(p_opt, jnp.concatenate([h_opt, agg_o], -1)))
+def _layer(p_dev, p_opt, adj, adj_t, h_dev, h_opt, use_pallas):
+    """One Eq-12 round for both node types via the fused kernel."""
+    wd_s, wd_n, bd = _split(p_dev, h_dev.shape[-1])
+    wo_s, wo_n, bo = _split(p_opt, h_opt.shape[-1])
+    new_dev = ops.gcn_agg(adj, h_dev, h_opt, wd_s, wd_n, bd,
+                          use_pallas=use_pallas)
+    new_opt = ops.gcn_agg(adj_t, h_opt, h_dev, wo_s, wo_n, bo,
+                          use_pallas=use_pallas)
     return new_dev, new_opt
 
 
-def embed(params, g: MECGraph):
-    """Two rounds of message passing -> (h_dev [M, h2], h_opt [O, h2])."""
-    h_dev, h_opt = _layer(params["dev1"], params["opt1"], g.adj,
-                          g.device_feat, g.option_feat)
-    h_dev, h_opt = _layer(params["dev2"], params["opt2"], g.adj, h_dev, h_opt)
-    return h_dev, h_opt
+def _flatten_batch(g: MECGraph):
+    """Collapse leading batch axes to one [B] axis (B=1 when unbatched)."""
+    batch = g.adj.shape[:-2]
+    flat = lambda x: x.reshape((-1,) + x.shape[len(batch):])
+    return MECGraph(*(flat(x) for x in g)), batch
 
 
-def edge_logits(params, h_dev, h_opt, edge_feat=None):
-    """Eq 14 pre-sigmoid logits for every (device, option) edge: [M, O]."""
-    src = Linear.apply(params["edge_src"], h_dev)            # [M, E]
-    dst = Linear.apply(params["edge_dst"], h_opt)            # [O, E]
-    h = src[:, None, :] + dst[None, :, :]                     # [M, O, E]
-    if edge_feat is not None and "edge_feat" in params:
-        h = h + Linear.apply(params["edge_feat"], edge_feat[..., None])
-    h = jax.nn.relu(h)
-    return Linear.apply(params["edge_out"], h)[..., 0]        # [M, O]
+def embed(params, g: MECGraph, *, use_pallas=None):
+    """Two rounds of message passing -> (h_dev [..., M, h2],
+    h_opt [..., O, h2]); leading batch axes pass through unchanged."""
+    gf, batch = _flatten_batch(g)
+    adj_t = jnp.swapaxes(gf.adj, -1, -2)
+    h_dev, h_opt = _layer(params["dev1"], params["opt1"], gf.adj, adj_t,
+                          gf.device_feat, gf.option_feat, use_pallas)
+    h_dev, h_opt = _layer(params["dev2"], params["opt2"], gf.adj, adj_t,
+                          h_dev, h_opt, use_pallas)
+    unflat = lambda x: x.reshape(batch + x.shape[1:])
+    return unflat(h_dev), unflat(h_opt)
 
 
-def apply(params, g: MECGraph):
-    """Relaxed offloading action x̂ in (0,1)^{M×O}; disconnected edges -> 0."""
-    h_dev, h_opt = embed(params, g)
-    logits = edge_logits(params, h_dev, h_opt, edge_feat=g.adj)
+def edge_logits(params, h_dev, h_opt, edge_feat=None, *, use_pallas=None):
+    """Eq 14 pre-sigmoid logits for every (device, option) edge
+    [..., M, O]; ``edge_feat=None`` scores edges on embeddings alone
+    (equivalent to a zero edge feature)."""
+    batch = h_dev.shape[:-2]
+    flat = lambda x: x.reshape((-1,) + x.shape[len(batch):])
+    hd, ho = flat(h_dev), flat(h_opt)
+    m, o = hd.shape[-2], ho.shape[-2]
+    if edge_feat is None or "edge_feat" not in params:
+        ef = jnp.zeros((hd.shape[0], m, o), hd.dtype)
+        w_feat = jnp.zeros((params["edge_src"]["w"].shape[-1],), hd.dtype)
+    else:
+        ef = flat(edge_feat)
+        w_feat = params["edge_feat"]["w"][0]
+    logits = ops.edge_score(
+        hd, ho, ef,
+        params["edge_src"]["w"], params["edge_src"]["b"],
+        params["edge_dst"]["w"], w_feat,
+        params["edge_out"]["w"][:, 0], params["edge_out"]["b"],
+        use_pallas=use_pallas)
+    return logits.reshape(batch + (m, o))
+
+
+def apply(params, g: MECGraph, *, use_pallas=None):
+    """Relaxed offloading action x̂ in (0,1)^{...×M×O}; disconnected
+    edges -> 0. Batch axes on ``g`` batch the output."""
+    h_dev, h_opt = embed(params, g, use_pallas=use_pallas)
+    logits = edge_logits(params, h_dev, h_opt, edge_feat=g.adj,
+                         use_pallas=use_pallas)
     logits = jnp.where(g.mask > 0.5, logits, -1e9)
     return jax.nn.sigmoid(logits), logits

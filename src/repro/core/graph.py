@@ -27,35 +27,44 @@ def build_graph(obs: dict, n_servers: int, n_exits: int,
                 *, device_id: bool = True) -> MECGraph:
     """Assemble graph tensors from ``MECEnv.observe`` output.
 
+    Batch-aware: observation leaves may carry arbitrary leading axes
+    (``[..., M, Fd]`` etc.) — a batched observation yields an equally
+    batched graph, so replay minibatches, fleets and packed sweep cells
+    build graphs in one call.
+
     ``device_id`` appends a per-device index feature. A purely equivariant
     GCN cannot express the symmetry-breaking assignments the critic makes
     (two near-identical devices must go to *different* servers to balance
     the queue); the id feature breaks the tie the same way DROO's fixed
     input slots do. Set False for topology-transfer experiments.
     """
-    device = obs["device"]                      # [M, Fd]
+    device = obs["device"]                      # [..., M, Fd]
     if device_id:
-        m = device.shape[0]
+        m = device.shape[-2]
         ids = (jnp.arange(m, dtype=device.dtype) / max(m - 1, 1))[:, None]
+        ids = jnp.broadcast_to(ids, device.shape[:-1] + (1,))
         device = jnp.concatenate([device, ids], axis=-1)
-    option = obs["option"]                      # [N*L, Fo]
+    option = obs["option"]                      # [..., N*L, Fo]
     # expand per-server link quantities over that server's L exit options
-    rate = jnp.repeat(obs["edge_rate"], n_exits, axis=1)    # [M, N*L]
-    mask = jnp.repeat(obs["connect"], n_exits, axis=1)      # [M, N*L]
+    rate = jnp.repeat(obs["edge_rate"], n_exits, axis=-1)   # [..., M, N*L]
+    mask = jnp.repeat(obs["connect"], n_exits, axis=-1)     # [..., M, N*L]
     adj = rate * mask
     return MECGraph(device, option, adj, mask)
 
 
 def pad_graph(g: MECGraph, max_devices: int) -> MECGraph:
-    """Zero-pad the device dimension so replay buffers over dynamic-M
-    scenarios have static shapes (padded devices have no edges)."""
-    m = g.device_feat.shape[0]
+    """Zero-pad the device dimension (axis -2) so replay buffers over
+    dynamic-M scenarios have static shapes (padded devices have no
+    edges); leading batch axes pass through unchanged."""
+    m = g.device_feat.shape[-2]
     if m == max_devices:
         return g
     pad = max_devices - m
+    dev_pad = lambda x: jnp.pad(
+        x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
     return MECGraph(
-        jnp.pad(g.device_feat, ((0, pad), (0, 0))),
+        dev_pad(g.device_feat),
         g.option_feat,
-        jnp.pad(g.adj, ((0, pad), (0, 0))),
-        jnp.pad(g.mask, ((0, pad), (0, 0))),
+        dev_pad(g.adj),
+        dev_pad(g.mask),
     )

@@ -31,6 +31,13 @@ replay ring; every ω slots the actor trains on a full minibatch with the
 cross-entropy loss (Eq 16), Adam lr=1e-3 — all per §VI-A. Training is
 gated on a *full* minibatch everywhere (host, loop, scan — one rule).
 
+The actor forward is batch-native and kernel-backed: graph leaves may
+carry arbitrary leading batch axes, ``AgentDef.loss`` scores the whole
+replay minibatch in one pass, and the GCN dispatches through
+``repro.kernels.ops`` (Pallas on TPU, jnp reference elsewhere) — the
+``use_pallas`` field overrides the backend auto-selection and is
+threaded through the driver, sweep runner and serve engine.
+
 ``repro.core.agent.OffloadingAgent`` is a thin deprecated shim over this
 API; new code should construct defs via ``agent_def(method, env)``.
 """
@@ -75,17 +82,21 @@ class MLPActor:
 
     @staticmethod
     def features(g: MECGraph, n_exits: int):
+        """Flat per-graph feature vector [..., M*(N+2)]; leading batch
+        axes on the graph leaves batch the features."""
         # edge_rate was expanded over exits in build_graph; recover [M, N]
-        rates = g.adj[:, ::n_exits]
-        task = g.device_feat[:, :2]                  # size, deadline
-        return jnp.concatenate([rates, task], axis=-1).reshape(-1)
+        rates = g.adj[..., :, ::n_exits]
+        task = g.device_feat[..., :, :2]             # size, deadline
+        batch = g.adj.shape[:-2]
+        return jnp.concatenate([rates, task], axis=-1).reshape(batch + (-1,))
 
     @staticmethod
     def apply(params, g: MECGraph, n_exits: int):
         x = MLPActor.features(g, n_exits)
         h = jax.nn.relu(MLP.apply(params["trunk"], x))
-        m, o = g.adj.shape
-        logits = Linear.apply(params["head"], h).reshape(m, o)
+        m, o = g.adj.shape[-2:]
+        batch = g.adj.shape[:-2]
+        logits = Linear.apply(params["head"], h).reshape(batch + (m, o))
         logits = jnp.where(g.mask > 0.5, logits, -1e9)
         return jax.nn.sigmoid(logits), logits
 
@@ -173,6 +184,11 @@ class AgentDef:
     batch_size: int = 64
     train_every: int = 10
     lr: float = 1e-3
+    # backend switch for the kernel-backed actor path: None auto-selects
+    # by backend (Pallas kernels on TPU, jnp reference elsewhere); True /
+    # False force it. Threaded to every consumer (driver, sweep runner,
+    # serve engine) so the whole stack runs one batched program.
+    use_pallas: Optional[bool] = None
 
     def __post_init__(self):
         if self.actor not in ("gcn", "mlp"):
@@ -245,15 +261,21 @@ class AgentDef:
 
     # ----------------------------------------------------------- actor pass
     def scores(self, params, g: MECGraph, exit_mask: jax.Array):
-        """Relaxed decision x̂ and logits over [M, N*L] edges."""
+        """Relaxed decision x̂ and logits over [..., M, N*L] edges.
+
+        Batch-native: leading batch axes on the graph leaves (a replay
+        minibatch, a fleet, a candidate set) run as one kernel-backed
+        forward; ``exit_mask`` is [N*L] (or batched alike) and
+        broadcasts.
+        """
         if self.actor == "gcn":
-            x_hat, logits = gcn.apply(params, g)
+            x_hat, logits = gcn.apply(params, g, use_pallas=self.use_pallas)
         else:
             x_hat, logits = MLPActor.apply(params, g, self.n_exits)
         # disallowed (masked-exit or disconnected) options get -inf scores
         # so the order-preserving quantizer can never flip a device onto
         # them
-        allowed = (exit_mask[None, :] > 0.5) & (g.mask > 0.5)
+        allowed = (exit_mask > 0.5) & (g.mask > 0.5)
         x_hat = jnp.where(allowed, x_hat, -1e9)
         logits = jnp.where(allowed, logits, -1e9)
         return x_hat, logits
@@ -299,19 +321,29 @@ class AgentDef:
 
     # ----------------------------------------------------------------- loss
     def loss(self, params, graphs: MECGraph, decisions, exit_mask):
-        """Averaged masked BCE over edges (Eq 16)."""
+        """Averaged masked BCE over edges (Eq 16), one batched pass.
 
-        def one(g, dec):
-            _, logits = self.scores(params, g, exit_mask)
-            m, o = logits.shape
-            target = jax.nn.one_hot(dec, o)                       # [M, O]
-            valid = g.mask * exit_mask[None, :]
-            # numerically-stable BCE from logits
-            per_edge = jnp.maximum(logits, 0) - logits * target \
-                + jnp.log1p(jnp.exp(-jnp.abs(logits)))
-            return jnp.sum(per_edge * valid) / jnp.maximum(valid.sum(), 1.0)
+        ``graphs`` carries the minibatch on its leading axis ([B, M, ...])
+        and the whole batch is scored by a single kernel-backed forward —
+        no per-graph closure. With the one-hot target the BCE splits into
+        softplus over every valid edge minus the logit at each device's
+        decision edge (a gather instead of a [B, M, O] one-hot product):
 
-        return jnp.mean(jax.vmap(one)(graphs, decisions))
+            per_edge = softplus(l) - l * target
+        """
+        _, logits = self.scores(params, graphs, exit_mask)     # [B, M, O]
+        valid = graphs.mask * exit_mask                        # [B, M, O]
+        # numerically-stable softplus from logits; masked (-1e9) edges
+        # contribute exactly 0 and are zeroed by ``valid`` regardless
+        softplus = jnp.maximum(logits, 0) \
+            + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        pos = jnp.sum(softplus * valid, axis=(-2, -1))         # [B]
+        dec = decisions[..., None].astype(jnp.int32)
+        l_at = jnp.take_along_axis(logits, dec, axis=-1)[..., 0]
+        v_at = jnp.take_along_axis(valid, dec, axis=-1)[..., 0]
+        neg = jnp.sum(l_at * v_at, axis=-1)                    # [B]
+        denom = jnp.maximum(valid.sum(axis=(-2, -1)), 1.0)
+        return jnp.mean((pos - neg) / denom)
 
     # ------------------------------------------------------------- training
     def train_step(self, state: AgentState):

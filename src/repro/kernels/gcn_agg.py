@@ -13,6 +13,7 @@ a replay minibatch of 64 graphs is the batch axis).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,9 +38,16 @@ def _kernel(adj_ref, hs_ref, hn_ref, ws_ref, wn_ref, b_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gcn_agg(adj, self_feat, nbr_feat, w_self, w_nbr, bias, *,
-            interpret: bool = True):
+            interpret: Optional[bool] = None):
     """adj [B,M,O], self_feat [B,M,Fs], nbr_feat [B,O,Fn],
-    w_self [Fs,H], w_nbr [Fn,H], bias [H] -> relu'd [B,M,H]."""
+    w_self [Fs,H], w_nbr [Fn,H], bias [H] -> relu'd [B,M,H].
+
+    ``interpret=None`` derives the default from the backend (compiled on
+    TPU, interpreter elsewhere) — the same rule ``ops.py`` applies, so a
+    direct caller on TPU gets the real kernel, not the interpreter.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b, m, o = adj.shape
     fs = self_feat.shape[-1]
     fn = nbr_feat.shape[-1]

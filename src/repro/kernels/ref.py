@@ -84,3 +84,20 @@ def gcn_agg_ref(adj, self_feat, nbr_feat, w_self, w_nbr, bias):
     agg = (adj @ nbr_feat) / (deg + 1e-6)
     pre = self_feat @ w_self + agg @ w_nbr + bias
     return jax.nn.relu(pre)
+
+
+def edge_score_ref(h_src, h_dst, edge_feat, w_src, b_src, w_dst, w_feat,
+                   w_out, b_out):
+    """Fused edge scorer (Eq. 13–14): src/dst/edge-feature projections,
+    ReLU, scalar output head.
+
+    h_src [B, M, H], h_dst [B, O, H], edge_feat [B, M, O];
+    w_src/w_dst [H, E], b_src/w_feat/w_out [E], b_out [1] -> [B, M, O].
+    The sum-reduction form (relu(x)·w_out) lets XLA fuse the [B, M, O, E]
+    hidden into the reduction loop instead of materializing it.
+    """
+    src = h_src @ w_src + b_src                       # [B, M, E]
+    dst = h_dst @ w_dst                               # [B, O, E]
+    x = src[..., :, None, :] + dst[..., None, :, :] \
+        + edge_feat[..., None] * w_feat
+    return jnp.sum(jax.nn.relu(x) * w_out, axis=-1) + b_out[0]

@@ -92,13 +92,15 @@ class RolloutDriver:
                  replay_capacity: Optional[int] = None,
                  batch_size: Optional[int] = None,
                  train_every: Optional[int] = None,
-                 per_fleet_scenarios: bool = False):
+                 per_fleet_scenarios: bool = False,
+                 use_pallas: Optional[bool] = None):
         if isinstance(agent, AgentDef):
             adef, self._shim = agent, None
         else:                         # legacy OffloadingAgent shim
             adef, self._shim = agent.adef, agent
         # episode-level overrides become a derived def: the def is the
         # single source of truth for replay capacity / batch / cadence
+        # (and the kernel backend switch)
         overrides = {}
         if replay_capacity is not None:
             overrides["buffer_size"] = replay_capacity
@@ -106,6 +108,8 @@ class RolloutDriver:
             overrides["batch_size"] = batch_size
         if train_every is not None:
             overrides["train_every"] = train_every
+        if use_pallas is not None:
+            overrides["use_pallas"] = use_pallas
         self.adef = (dataclasses.replace(adef, **overrides) if overrides
                      else adef)
         # vmap axis for ScenarioParams inside the slot body: None shares

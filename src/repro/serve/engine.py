@@ -59,7 +59,8 @@ class EdgeServingEngine:
                  batch_slots: int = 4, seed: int = 0,
                  workload: Optional[str] = None,
                  arrival_rate: Optional[float] = None,
-                 scenario: Optional[str] = None):
+                 scenario: Optional[str] = None,
+                 use_pallas: Optional[bool] = None):
         """``scenario`` names a ``repro.mec.SCENARIOS`` entry whose dynamic
         knobs (capacity range, jitter, CSI error, workload process, ...)
         overlay the engine's MEC world model — exit tables and shape stay
@@ -67,7 +68,10 @@ class EdgeServingEngine:
         ``arrival_rate=`` always win over the scenario's. Numeric knobs
         can also be hot-swapped later via ``set_scenario_params`` without
         recompiling. Defaults without a scenario: ``workload="iid"``,
-        ``arrival_rate=0.7``."""
+        ``arrival_rate=0.7``. ``use_pallas`` is the scheduler's kernel
+        backend switch (None auto-selects: Pallas on TPU, jnp reference
+        elsewhere) — the same batched actor program the rollout and sweep
+        layers run."""
         key = key if key is not None else jax.random.PRNGKey(seed)
         self.cfg = cfg
         self.model = model_for(cfg)
@@ -127,7 +131,9 @@ class EdgeServingEngine:
         self._req_rng = np.random.default_rng(seed)
         # pure-functional scheduler: the def is static structure, the
         # state is one hot-swappable pytree (see get/set_agent_state)
-        self.agent_def = agent_def(scheduler, self.env) if scheduler else None
+        self.agent_def = (agent_def(scheduler, self.env,
+                                    use_pallas=use_pallas)
+                          if scheduler else None)
         self.agent_state = (self.agent_def.init(key)
                             if self.agent_def is not None else None)
         self._agent_step = (jax.jit(self.agent_def.step)

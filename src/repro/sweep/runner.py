@@ -46,11 +46,12 @@ def _scenario_env(cell: Cell) -> MECEnv:
 
 
 def _cell_def(cell: Cell, env: MECEnv, *, method: Optional[str] = None,
-              actor: Optional[str] = None) -> AgentDef:
+              actor: Optional[str] = None,
+              use_pallas: Optional[bool] = None) -> AgentDef:
     """The cell's agent spec; ``actor=`` builds the pack-template def
     (family only — per-cell exit masks are swapped in as state data)."""
     kw = dict(buffer_size=cell.replay_capacity, batch_size=cell.batch_size,
-              train_every=cell.train_every)
+              train_every=cell.train_every, use_pallas=use_pallas)
     if actor is not None:
         return AgentDef(env=env, actor=actor, **kw)
     return agent_def(method or cell.method, env, **kw)
@@ -77,12 +78,13 @@ class PackProgram:
     ``benchmarks/sweep_throughput.py`` times as ``packed_warm``.
     """
 
-    def __init__(self, pack: Pack, *, mesh=None):
+    def __init__(self, pack: Pack, *, mesh=None,
+                 use_pallas: Optional[bool] = None):
         self.pack = pack
         cells = list(pack.cells)
         ref = cells[0]
         env = _scenario_env(ref)
-        adef = _cell_def(ref, env, actor=pack.family)
+        adef = _cell_def(ref, env, actor=pack.family, use_pallas=use_pallas)
         drv = RolloutDriver(adef, n_fleets=ref.n_fleets)
         self._env = env
 
@@ -136,20 +138,21 @@ class PackProgram:
         return rows
 
 
-def run_pack(pack: Pack, *, mesh=None) -> list:
+def run_pack(pack: Pack, *, mesh=None,
+             use_pallas: Optional[bool] = None) -> list:
     """Run every cell of a pack in one vmapped (optionally sharded) episode.
 
     Returns one metrics row per cell, in pack order.
     """
-    return PackProgram(pack, mesh=mesh).run()
+    return PackProgram(pack, mesh=mesh, use_pallas=use_pallas).run()
 
 
 # -------------------------------------------------------------- sequential
-def run_cell(cell: Cell) -> dict:
+def run_cell(cell: Cell, *, use_pallas: Optional[bool] = None) -> dict:
     """One cell through a plain ``RolloutDriver`` (reference/baseline)."""
     env = _scenario_env(cell)
     pkey, rkey = cell_keys(cell)
-    adef = _cell_def(cell, env)
+    adef = _cell_def(cell, env, use_pallas=use_pallas)
     drv = RolloutDriver(adef, n_fleets=cell.n_fleets)
     carry, _ = drv.run(rkey, cell.n_slots, mode="scan",
                        agent_state=adef.init(pkey))
@@ -160,7 +163,8 @@ def run_cell(cell: Cell) -> dict:
 
 # ------------------------------------------------------------------- sweep
 def run_sweep(spec: SweepSpec, *, store: Optional[SweepStore] = None,
-              mesh=None, packed: bool = True, log=print) -> list:
+              mesh=None, packed: bool = True, log=print,
+              use_pallas: Optional[bool] = None) -> list:
     """Run the whole grid; returns rows in ``spec.expand()`` order.
 
     With a store, finished cells are loaded instead of recomputed and
@@ -184,15 +188,18 @@ def run_sweep(spec: SweepSpec, *, store: Optional[SweepStore] = None,
             continue
         log(f"  [sweep] {pack.label()}: running "
             f"({len(pack.cells) - len(missing)} cached)")
+        # None (the default) is omitted so monkeypatched/legacy runners
+        # with the pre-switch signature keep working
+        kw = {} if use_pallas is None else {"use_pallas": use_pallas}
         if packed:
             # the whole pack runs (one compiled episode), but cached cells
             # keep their stored rows — never recomputed results
-            pairs = [(c, row) for c, row in zip(pack.cells,
-                                                run_pack(pack, mesh=mesh))
+            rows = run_pack(pack, mesh=mesh, **kw)
+            pairs = [(c, row) for c, row in zip(pack.cells, rows)
                      if c in missing]
         else:
             # per-cell runs are independent: execute only the missing ones
-            pairs = [(c, run_cell(c)) for c in missing]
+            pairs = [(c, run_cell(c, **kw)) for c in missing]
         for c, row in pairs:
             results[c] = row
             if store is not None:

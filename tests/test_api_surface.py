@@ -47,13 +47,15 @@ def test_agent_def_static_fields_and_defaults():
     fields = {f.name: f for f in dataclasses.fields(AgentDef)}
     assert list(fields) == [
         "env", "actor", "early_exit", "hidden", "n_candidates", "n_random",
-        "buffer_size", "batch_size", "train_every", "lr"]
+        "buffer_size", "batch_size", "train_every", "lr", "use_pallas"]
     # §VI-A defaults: replay 128, minibatch 64, train cadence ω=10, Adam 1e-3
     assert fields["buffer_size"].default == 128
     assert fields["batch_size"].default == 64
     assert fields["train_every"].default == 10
     assert fields["lr"].default == 1e-3
     assert fields["n_random"].default == 16
+    # kernel backend switch: None = auto (Pallas on TPU, jnp ref elsewhere)
+    assert fields["use_pallas"].default is None
     assert AgentDef.__dataclass_params__.frozen
 
 
@@ -82,3 +84,27 @@ def test_subsystems_use_only_the_pure_api():
         text = (SRC / rel).read_text()
         for token in banned:
             assert token not in text, f"{rel} references {token}"
+
+
+def test_kernels_reached_only_through_ops():
+    """Raw kernel entry points (``repro.kernels.gcn_agg.gcn_agg``-style)
+    are ``kernels/ops.py``'s business only: every other module goes
+    through the dispatching ops layer, which owns backend selection
+    (Pallas vs jnp reference) and the custom VJPs. Direct imports skip
+    both."""
+    banned = ("from repro.kernels.gcn_agg import",
+              "from repro.kernels.edge_score import",
+              "repro.kernels.gcn_agg._gcn",
+              "kernels.gcn_agg import gcn_agg",
+              "kernels.edge_score import edge_score")
+    for path in sorted(SRC.rglob("*.py")):
+        rel = path.relative_to(SRC)
+        if rel.as_posix() in ("kernels/ops.py",):
+            continue
+        if rel.parts[0] == "kernels" and rel.name in ("gcn_agg.py",
+                                                      "edge_score.py"):
+            continue
+        text = path.read_text()
+        for token in banned:
+            assert token not in text, f"{rel} imports the raw kernel: " \
+                                      f"{token}"

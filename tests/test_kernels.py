@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
+from repro.kernels.edge_score import edge_score
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gcn_agg import gcn_agg
 from repro.kernels.ssm_scan import ssm_scan
@@ -97,6 +98,85 @@ def test_gcn_agg(key, b, m, o, fs, fn, h):
     want = ref.gcn_agg_ref(adj, hs, hn, ws, wn, bias)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------- actor-path kernels
+# Odd, non-tile-aligned shapes straight from the MEC regime: M devices in
+# the tens, O = N*L options, replay-minibatch batch sizes. Both kernels
+# run in interpret mode on CPU; the jnp refs are the ground truth.
+ACTOR_SHAPES = [(b, m, o) for b in (1, 64) for m in (5, 14)
+                for o in (6, 12)]
+
+
+def _gcn_args(key, b, m, o, fs=7, fn=4, h=16):
+    ks = jax.random.split(key, 6)
+    sparse = jax.random.uniform(ks[0], (b, m, o)) > 0.3
+    adj = jax.random.uniform(ks[0], (b, m, o)) * sparse
+    return (adj, rand(ks[1], (b, m, fs), jnp.float32),
+            rand(ks[2], (b, o, fn), jnp.float32),
+            rand(ks[3], (fs, h), jnp.float32),
+            rand(ks[4], (fn, h), jnp.float32),
+            rand(ks[5], (h,), jnp.float32))
+
+
+def _edge_args(key, b, m, o, h=9, e=11):
+    ks = jax.random.split(key, 8)
+    return (rand(ks[0], (b, m, h), jnp.float32),
+            rand(ks[1], (b, o, h), jnp.float32),
+            jax.random.uniform(ks[2], (b, m, o)),
+            rand(ks[3], (h, e), jnp.float32),
+            rand(ks[4], (e,), jnp.float32),
+            rand(ks[5], (h, e), jnp.float32),
+            rand(ks[6], (e,), jnp.float32),
+            rand(ks[7], (e,), jnp.float32),
+            rand(ks[0], (1,), jnp.float32))
+
+
+@pytest.mark.parametrize("b,m,o", ACTOR_SHAPES)
+def test_gcn_agg_kernel_vs_ref_odd_shapes(key, b, m, o):
+    args = _gcn_args(key, b, m, o)
+    out = gcn_agg(*args, interpret=True)
+    want = ref.gcn_agg_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,m,o", ACTOR_SHAPES)
+def test_edge_score_kernel_vs_ref_odd_shapes(key, b, m, o):
+    args = _edge_args(key, b, m, o)
+    out = edge_score(*args, interpret=True)
+    want = ref.edge_score_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,m,o", [(1, 5, 6), (64, 14, 12)])
+def test_ops_gcn_agg_custom_vjp_matches_autodiff(key, b, m, o):
+    """Hand-written backward == autodiff of the jnp reference."""
+    args = _gcn_args(key, b, m, o)
+    out = ops.gcn_agg(*args)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.gcn_agg_ref(*args)),
+                               rtol=1e-5, atol=1e-5)
+    got = jax.grad(lambda a: jnp.sum(ops.gcn_agg(*a) ** 2))(args)
+    want = jax.grad(lambda a: jnp.sum(ref.gcn_agg_ref(*a) ** 2))(args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,m,o", [(1, 5, 6), (64, 14, 12)])
+def test_ops_edge_score_custom_vjp_matches_autodiff(key, b, m, o):
+    args = _edge_args(key, b, m, o)
+    out = ops.edge_score(*args)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.edge_score_ref(*args)),
+                               rtol=1e-5, atol=1e-5)
+    got = jax.grad(lambda a: jnp.sum(ops.edge_score(*a) ** 2))(args)
+    want = jax.grad(lambda a: jnp.sum(ref.edge_score_ref(*a) ** 2))(args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=1e-4)
 
 
 def test_ssm_kernel_matches_model_chunked(key):
