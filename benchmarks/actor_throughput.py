@@ -40,12 +40,12 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import assert_two_compile_packs, merge_bench_rows
+from benchmarks.common import (assert_two_compile_packs, merge_bench_rows,
+                               timed)
 from repro.core.devreplay import replay_add
 from repro.core.graph import MECGraph, build_graph
 from repro.core.policy import agent_def
@@ -207,12 +207,8 @@ def run_throughput(rows, quick: bool):
     # cold, end-to-end: compile + run for the whole workload. The legacy
     # path compiles per cell (the mask constant splits even same-shape
     # cells); the batched path compiles once for the family.
-    t0 = time.perf_counter()
-    legacy_all_cells()
-    legacy_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    batched_all_cells()
-    batched_cold = time.perf_counter() - t0
+    _, legacy_cold = timed(legacy_all_cells)
+    _, batched_cold = timed(batched_all_cells)
 
     # warm per-step rate: same programs re-driven, best of K interleaved
     # trials (box load varies 2-3x; the min isolates steady state)
@@ -221,12 +217,10 @@ def run_throughput(rows, quick: bool):
     legacy_all_cells(legacy_fns)          # compile once for the warm runs
     legacy_warm, batched_warm = [], []
     for _ in range(k_trials):
-        t0 = time.perf_counter()
-        legacy_all_cells(legacy_fns)
-        legacy_warm.append((time.perf_counter() - t0) / total)
-        t0 = time.perf_counter()
-        batched_all_cells()
-        batched_warm.append((time.perf_counter() - t0) / total)
+        _, wall = timed(legacy_all_cells, legacy_fns)
+        legacy_warm.append(wall / total)
+        _, wall = timed(batched_all_cells)
+        batched_warm.append(wall / total)
 
     shape = (f"C={len(cells)} cells (grle,grl x {seeds} seeds) x "
              f"N={n_steps} steps, B={b} M={m} "

@@ -15,6 +15,20 @@ METHODS = ("grle", "grl", "drooe", "droo")
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
 
 
+def timed(fn, *args, **kwargs):
+    """Run ``fn`` and return (result, wall seconds).
+
+    THE timing helper for every benchmark: the clock stops only after
+    ``jax.block_until_ready`` on the result, so async dispatch can't
+    make a path look faster than the device work it queued. Use a
+    monotonic wall clock (``perf_counter``), never ``time.time``.
+    """
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
 def rollout_method(method: str, scenario: str, *, n_devices: int,
                    slot_ms: float, slots: int, seed: int = 0):
     cfg = make_scenario(scenario, n_devices=n_devices, slot_ms=slot_ms)
@@ -22,18 +36,22 @@ def rollout_method(method: str, scenario: str, *, n_devices: int,
     key = jax.random.PRNGKey(seed)
     agent = make_agent(method, env, key, seed=seed)
     metrics = RunningMetrics(slot_s=cfg.slot_s)
-    state = env.reset()
-    t0 = time.time()
-    for _ in range(slots):
-        key, sk = jax.random.split(key)
-        tasks = env.sample_slot(sk)
-        dec, _ = agent.act(state, tasks)
-        state, res = env.step(state, tasks, dec)
-        metrics.update(res, tasks.active)
+
+    def episode():
+        state = env.reset()
+        k = key
+        for _ in range(slots):
+            k, sk = jax.random.split(k)
+            tasks = env.sample_slot(sk)
+            dec, _ = agent.act(state, tasks)
+            state, res = env.step(state, tasks, dec)
+            metrics.update(res, tasks.active)
+        return state
+
+    _, wall_s = timed(episode)
     out = metrics.summary()
     out.update(method=method, scenario=scenario, n_devices=n_devices,
-               slot_ms=slot_ms, slots=slots,
-               wall_s=round(time.time() - t0, 1))
+               slot_ms=slot_ms, slots=slots, wall_s=round(wall_s, 1))
     return out
 
 
@@ -95,17 +113,17 @@ def assert_two_compile_packs(scenarios: str, seeds: int, *, n_devices=4,
     assert {p.family for p in packs} == {"gcn", "mlp"}
     k = len(spec.scenarios)
     assert sum(len(p.cells) for p in packs) == len(cells) == 4 * seeds * k
-    for pack in packs:
-        prog = PackProgram(pack)
-        prog.run()
-        prog.run()                 # warm re-run must reuse the cache
-        # _cache_size is jax-internal; when present, pin the stronger
-        # claim (one compile per program) without letting a jax upgrade
-        # break the guard itself
-        cache_size = getattr(prog._episode, "_cache_size", None)
-        if cache_size is not None:
-            n = cache_size()
-            assert n == 1, f"{pack.label()} compiled {n} episodes"
+    # CompileTracker owns both measurement levels: per-program cache
+    # pins (exact — skipped if a jax upgrade hides the probe) plus the
+    # process-wide compile-event stream for logging
+    from repro.obs import CompileTracker
+    with CompileTracker() as ct:
+        for pack in packs:
+            prog = PackProgram(pack)
+            prog.run()
+            prog.run()             # warm re-run must reuse the cache
+            ct.track(pack.label(), prog._episode)
+    ct.assert_counts({pack.label(): 1 for pack in packs})
     return packs, cells
 
 

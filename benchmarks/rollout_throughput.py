@@ -18,12 +18,11 @@ over B fleets (fleet-slots/sec).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import save_rows
+from benchmarks.common import save_rows, timed
 from repro.core import make_agent
 from repro.mec import MECConfig, MECEnv
 from repro.rollout import RolloutDriver
@@ -39,28 +38,29 @@ def _legacy_slots_per_s(env, key, n_slots):
         tasks = env.sample_slot(sk)
         dec, _ = agent.act(state, tasks)
         state, _ = env.step(state, tasks, dec)
-    agent = make_agent("grle", env, key)
-    state = env.reset()
-    t0 = time.perf_counter()
-    k = key
-    for _ in range(n_slots):
-        k, sk = jax.random.split(k)
-        tasks = env.sample_slot(sk)
-        dec, _ = agent.act(state, tasks)
-        state, _ = env.step(state, tasks, dec)
-    jax.block_until_ready(state)
-    return n_slots / (time.perf_counter() - t0)
+
+    def episode():
+        agent2 = make_agent("grle", env, key)
+        state = env.reset()
+        k = key
+        for _ in range(n_slots):
+            k, sk = jax.random.split(k)
+            tasks = env.sample_slot(sk)
+            dec, _ = agent2.act(state, tasks)
+            state, _ = env.step(state, tasks, dec)
+        return state
+
+    _, wall = timed(episode)
+    return n_slots / wall
 
 
-def _driver_slots_per_s(env, key, n_slots, *, mode, n_fleets=1):
+def _driver_slots_per_s(env, key, n_slots, *, mode, n_fleets=1,
+                        telemetry=False):
     agent = make_agent("grle", env, key)
-    drv = RolloutDriver(agent, n_fleets=n_fleets)
-    carry, trace = drv.run(key, n_slots, mode=mode)    # compile + warm
-    jax.block_until_ready(trace.reward)
-    t0 = time.perf_counter()
-    carry, trace = drv.run(key, n_slots, mode=mode)
-    jax.block_until_ready(trace.reward)
-    return n_slots / (time.perf_counter() - t0)
+    drv = RolloutDriver(agent, n_fleets=n_fleets, telemetry=telemetry)
+    jax.block_until_ready(drv.run(key, n_slots, mode=mode))  # compile+warm
+    _, wall = timed(drv.run, key, n_slots, mode=mode)
+    return n_slots / wall
 
 
 def run(quick: bool = False):
@@ -86,6 +86,13 @@ def run(quick: bool = False):
     row("rollout/scan", scan,
         f"{shape} speedup_vs_legacy={scan / legacy:.1f}x "
         f"speedup_vs_driver_loop={scan / loop:.1f}x")
+
+    # observability cost: the scan episode with the Telemetry registry
+    # (counters + histograms) carried through the slot body
+    scan_tel = _driver_slots_per_s(env, key, t, mode="scan", telemetry=True)
+    row("rollout/scan_telemetry", scan_tel,
+        f"{shape} telemetry on, overhead_vs_scan="
+        f"{(scan / scan_tel - 1) * 100:.1f}%")
 
     # fleet scaling: fused episodes amortize over batched fleets
     for b in (4, 16) if not quick else (4,):

@@ -31,13 +31,13 @@ def bench_kernels(quick: bool = False):
     key = jax.random.PRNGKey(0)
     rows = []
 
+    from benchmarks.common import timed
+
     def timeit(name, fn, *args, derived=""):
         fn(*args)  # compile/warm
         n = 5 if quick else 20
-        t0 = time.perf_counter()
-        for _ in range(n):
-            jax.block_until_ready(fn(*args))
-        us = (time.perf_counter() - t0) / n * 1e6
+        wall = sum(timed(fn, *args)[1] for _ in range(n))
+        us = wall / n * 1e6
         rows.append({"name": name, "us_per_call": round(us, 1),
                      "derived": derived})
 
@@ -93,7 +93,7 @@ def main() -> None:
     for name in BENCHES:
         if name not in only:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         print(f"=== {name} ===", flush=True)
         if name == "kernels":
             rows = bench_kernels(args.quick)
@@ -102,7 +102,8 @@ def main() -> None:
             mod = importlib.import_module(f"benchmarks.{name}")
             rows = mod.run(quick=args.quick)
         all_rows[name] = rows
-        print(f"=== {name} done in {time.time() - t0:.0f}s ===", flush=True)
+        print(f"=== {name} done in {time.perf_counter() - t0:.0f}s ===",
+              flush=True)
 
     # final CSV digest (name,us_per_call,derived convention)
     print("\n# digest")

@@ -32,12 +32,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
-
-import jax
 
 from benchmarks.common import (assert_two_compile_packs, merge_bench_rows,
-                               save_rows)
+                               save_rows, timed)
 from repro.sharding.fleet import fleet_mesh
 from repro.sweep import SweepSpec, pack_cells, run_cell
 from repro.sweep.runner import PackProgram
@@ -64,19 +61,16 @@ def run_single(rows, quick: bool):
     mesh = fleet_mesh()
     n = len(cells)
 
-    t0 = time.perf_counter()
-    for cell in cells:
-        run_cell(cell)
-    seq_s = time.perf_counter() - t0
+    _, seq_s = timed(lambda: [run_cell(cell) for cell in cells])
 
-    t0 = time.perf_counter()
-    prog = PackProgram(pack, mesh=mesh)
-    prog.run()
-    packed_s = time.perf_counter() - t0
+    def packed_cold():
+        prog = PackProgram(pack, mesh=mesh)
+        prog.run()
+        return prog
 
-    t0 = time.perf_counter()          # same program: compile cache reused
-    prog.run()
-    packed_warm_s = time.perf_counter() - t0
+    prog, packed_s = timed(packed_cold)
+    # same program: compile cache reused
+    _, packed_warm_s = timed(prog.run)
 
     shape = (f"C={n} (grle,grl x {seeds} seeds) M={m} T={t}"
              + (f" sharded@{mesh.devices.size}" if mesh else " 1-device"))
@@ -111,20 +105,19 @@ def run_mixed(rows, quick: bool):
 
     per_scenario = pack_cells(cells, split_scenarios=True)
     assert len(per_scenario) == k
-    t0 = time.perf_counter()
-    for pack in per_scenario:         # the pre-scenario-as-data baseline:
-        PackProgram(pack, mesh=mesh).run()   # K compiles, K dispatches
-    base_s = time.perf_counter() - t0
+    # the pre-scenario-as-data baseline: K compiles, K dispatches
+    _, base_s = timed(lambda: [PackProgram(p, mesh=mesh).run()
+                               for p in per_scenario])
 
     (pack,) = pack_cells(cells)       # scenario-as-data: 1 compile
-    t0 = time.perf_counter()
-    prog = PackProgram(pack, mesh=mesh)
-    prog.run()
-    cross_s = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    prog.run()
-    cross_warm_s = time.perf_counter() - t0
+    def cross_cold():
+        prog = PackProgram(pack, mesh=mesh)
+        prog.run()
+        return prog
+
+    prog, cross_s = timed(cross_cold)
+    _, cross_warm_s = timed(prog.run)
 
     shape = (f"C={n} K={k} (grle,grl x {seeds} seeds) M={m} T={t}"
              + (f" sharded@{mesh.devices.size}" if mesh else " 1-device"))

@@ -1,10 +1,11 @@
 """Subcommand dispatch: ``python -m repro.launch <command> [args...]``.
 
 Commands:
-  sweep   sharded (scenario x method x seed) experiment grids
-  serve   GRLE-scheduled early-exit LM serving driver
-  train   LLM training-step driver
-  dryrun  multi-pod compile dry-run
+  sweep    sharded (scenario x method x seed) experiment grids
+  serve    GRLE-scheduled early-exit LM serving driver
+  train    LLM training-step driver
+  dryrun   multi-pod compile dry-run
+  profile  instrumented rollout: telemetry + compile/trace capture + JSONL log
 
 ``python -m repro.launch.serve`` style module paths keep working; this
 entry point just gives the drivers one front door.
@@ -15,7 +16,7 @@ import sys
 
 
 def main() -> None:
-    commands = ("sweep", "serve", "train", "dryrun")
+    commands = ("sweep", "serve", "train", "dryrun", "profile")
     if len(sys.argv) < 2 or sys.argv[1] in ("-h", "--help"):
         print(__doc__)
         raise SystemExit(0 if len(sys.argv) >= 2 else 2)
@@ -25,6 +26,10 @@ def main() -> None:
         raise SystemExit(2)
     if cmd == "sweep":
         from repro.launch.sweep import main as run
+        run(argv)
+        return
+    if cmd == "profile":
+        from repro.launch.profile import main as run
         run(argv)
         return
     # legacy drivers parse sys.argv directly

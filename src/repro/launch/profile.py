@@ -1,0 +1,110 @@
+"""Profile launcher: one instrumented rollout, fully observed.
+
+    PYTHONPATH=src python -m repro.launch profile \
+        --scenario fig5_baseline --method grle --slots 200 --fleets 2 \
+        --out results/profile_run [--trace] [--episodes 2]
+
+Runs telemetry-enabled episodes through ``RolloutDriver`` with every
+observability leg on: the device-resident ``Telemetry`` registry
+(exit/latency/margin histograms, Eq-9 reward decomposition),
+``CompileTracker`` around compilation, optional ``jax.profiler`` trace
+capture (``--trace``; view with ``tensorboard --logdir <out>/trace`` or
+ui.perfetto.dev), and a JSONL run log under ``--out`` (manifest ->
+per-episode telemetry -> compile/timing summary). The first episode pays
+compilation; later episodes are the steady-state rate.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+from repro.core.policy import agent_def
+from repro.mec.env import MECEnv
+from repro.mec.scenarios import SCENARIOS, make_scenario
+from repro.obs import CompileTracker, RunLog, run_manifest, trace_capture
+from repro.rollout import RolloutDriver, carry_metrics, carry_telemetry
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch profile", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--scenario", default="fig5_baseline",
+                    choices=sorted(SCENARIOS))
+    ap.add_argument("--method", default="grle")
+    ap.add_argument("--slots", type=int, default=200)
+    ap.add_argument("--fleets", type=int, default=2)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="IoT devices M per network")
+    ap.add_argument("--slot-ms", type=float, default=30.0)
+    ap.add_argument("--replay", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--train-every", type=int, default=10)
+    ap.add_argument("--episodes", type=int, default=2,
+                    help="episode 1 pays compilation; the rest are the "
+                         "steady-state rate")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="results/profile_run",
+                    help="run directory: events.jsonl + trace artifacts")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture a jax.profiler trace of the steady-state "
+                         "episode into <out>/trace")
+    return ap
+
+
+def main(argv=None) -> dict:
+    args = build_parser().parse_args(argv)
+    cfg = make_scenario(args.scenario, n_devices=args.devices,
+                        slot_ms=args.slot_ms)
+    env = MECEnv(cfg)
+    adef = agent_def(args.method, env, buffer_size=args.replay,
+                     batch_size=args.batch, train_every=args.train_every)
+    drv = RolloutDriver(adef, n_fleets=args.fleets, telemetry=True)
+    key = jax.random.PRNGKey(args.seed)
+
+    manifest = run_manifest(
+        config_signature=cfg.static_signature(),
+        scenario=args.scenario, method=args.method, n_slots=args.slots,
+        n_fleets=args.fleets, n_devices=args.devices, seed=args.seed)
+    summary: dict = {}
+    with RunLog(args.out, manifest=manifest) as log, CompileTracker() as ct:
+        for ep in range(max(args.episodes, 1)):
+            ekey = jax.random.fold_in(key, ep)
+            tracing = args.trace and ep == max(args.episodes, 1) - 1
+            t0 = time.perf_counter()
+            with trace_capture(os.path.join(args.out, "trace"),
+                               enabled=tracing):
+                carry, _ = drv.run(ekey, args.slots, mode="scan")
+                jax.block_until_ready(carry)
+            wall_s = time.perf_counter() - t0
+            tel = carry_telemetry(carry)
+            met = carry_metrics(carry, slot_s=cfg.slot_s,
+                                n_fleets=args.fleets)
+            log.emit("episode", episode=ep, wall_s=round(wall_s, 4),
+                     traced=tracing, metrics=met, telemetry=tel)
+            s = tel["summary"]
+            print(f"[profile] ep{ep}: {wall_s:.2f}s wall, "
+                  f"{met['tasks']} tasks, hit={s['deadline_hit_rate']:.3f}, "
+                  f"lat p50/p99={s['latency_p50']:.2f}/"
+                  f"{s['latency_p99']:.2f} (deadline units), "
+                  f"reward/task={s['avg_reward_per_task']:.3f}", flush=True)
+            summary = {"episode": ep, "wall_s": wall_s,
+                       "metrics": met, "telemetry_summary": s}
+        for n_slots, fn in drv._scan_cache.items():
+            ct.track(f"episode[T={n_slots}]", fn)
+        log.emit("compile", **ct.summary())
+    print(f"[profile] compile: {ct.summary()}", flush=True)
+    print(f"[profile] run log -> {os.path.join(args.out, 'events.jsonl')}",
+          flush=True)
+    if args.trace:
+        print(f"[profile] trace -> {os.path.join(args.out, 'trace')}",
+              flush=True)
+    summary["compile"] = ct.summary()
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,8 @@ import os
 
 from repro.sharding.fleet import fleet_mesh
 from repro.sweep import (SweepSpec, SweepStore, build_report,
-                         format_markdown, run_sweep, write_report)
+                         format_markdown, format_telemetry, run_sweep,
+                         write_report)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -46,6 +47,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sequential", action="store_true",
                     help="per-cell loop instead of packed execution "
                          "(reference/debug)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="carry the device-resident telemetry registry "
+                         "(exit/latency histograms, reward decomposition) "
+                         "and print the per-cell table")
     return ap
 
 
@@ -66,7 +71,8 @@ def main(argv=None) -> dict:
              else ", single device (vmap fallback)"), flush=True)
 
     rows = run_sweep(spec, store=store, mesh=mesh,
-                     packed=not args.sequential)
+                     packed=not args.sequential,
+                     telemetry=args.telemetry)
     if store is not None:
         print(f"[sweep] store {store.root}: {store.completed()} cells "
               f"on disk", flush=True)
@@ -76,6 +82,8 @@ def main(argv=None) -> dict:
         path = write_report(report, args.report)
         print(f"[sweep] report -> {path}", flush=True)
     print(format_markdown(report), flush=True)
+    if args.telemetry:
+        print(format_telemetry(rows), flush=True)
     return report
 
 

@@ -1,0 +1,41 @@
+"""Observability layer: device-resident telemetry, compile tracking,
+profiler hooks, structured run logs.
+
+Four legs (see docs/ARCHITECTURE.md "Observability layer"):
+
+  telemetry — ``Telemetry`` registry pytree (named counters +
+              fixed-bucket histograms) carried through the rollout scan;
+              one host transfer per episode/pack
+  compile   — ``CompileTracker``: jax.monitoring compile events + exact
+              per-jit-function compile-count pins (the pack guards)
+  profile   — opt-in ``jax.profiler`` trace capture, ``phase``/``span``
+              annotations around actor/critic/env/train
+  log       — JSONL run logs (manifest with config signature + git rev,
+              per-episode telemetry snapshots, bench rows), NaN-safe
+"""
+from repro.obs.telemetry import (
+    Histogram,
+    Telemetry,
+    hist_add,
+    hist_init,
+    hist_quantile,
+    hist_to_host,
+    rollout_telemetry,
+    telemetry_host,
+    telemetry_init,
+    telemetry_summary,
+    telemetry_update,
+)
+from repro.obs.compile import CompileTracker
+from repro.obs.profile import PHASES, phase, span, trace_capture
+from repro.obs.log import RunLog, json_safe, read_events, run_manifest
+
+__all__ = [
+    "Histogram", "Telemetry",
+    "hist_init", "hist_add", "hist_quantile", "hist_to_host",
+    "telemetry_init", "telemetry_update", "telemetry_host",
+    "telemetry_summary", "rollout_telemetry",
+    "CompileTracker",
+    "PHASES", "phase", "span", "trace_capture",
+    "RunLog", "json_safe", "read_events", "run_manifest",
+]

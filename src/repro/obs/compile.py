@@ -1,0 +1,125 @@
+"""Compile-count tracking: ``jax.monitoring`` events + per-function pins.
+
+The repo's scaling story rests on compile-count invariants ("a 4-method
+x seeds x scenarios grid is 2 compiled programs"), but until now the
+counting was ad-hoc — each benchmark ``--guard`` poked the jax-internal
+``_cache_size`` by hand. ``CompileTracker`` packages both measurement
+levels behind one context manager:
+
+* **Event stream** — while the context is active, every
+  ``/jax/core/compile/*`` duration event (jaxpr trace, MLIR lowering,
+  backend compile) is recorded. This sees *all* compilation in the
+  process, including eager-op fallbacks and jit caches warmed by other
+  code, so it is a logging/telemetry signal (how much wall-clock went
+  to XLA?), not an exact per-program assertion.
+* **Tracked functions** — ``track(name, fn)`` registers a jitted
+  callable; ``counts()`` reads each one's compile-cache size. A freshly
+  constructed jit wrapper starts at zero entries, so this is the exact
+  per-program count the pack guards assert — unaffected by anything
+  else the process compiled. ``_cache_size`` is jax-internal; where a
+  jax upgrade removes it, ``counts()`` reports ``None`` for that entry
+  and ``assert_counts`` skips it rather than failing the guard itself.
+
+Usage::
+
+    with CompileTracker() as ct:
+        prog = PackProgram(pack)
+        prog.run(); prog.run()
+        ct.track(pack.label(), prog._episode)
+    ct.assert_counts({pack.label(): 1})
+    log(ct.summary())   # n_compiles, total_compile_s, per-event durations
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+# The duration event XLA emits once per actual backend compilation.
+BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+COMPILE_EVENT_PREFIX = "/jax/core/compile/"
+
+
+def _unregister_duration_listener(cb) -> bool:
+    """Best-effort unregister (the public API has no removal hook)."""
+    try:
+        from jax._src import monitoring as _m
+        _m._unregister_event_duration_listener_by_callback(cb)
+        return True
+    except Exception:
+        return False
+
+
+class CompileTracker:
+    """Context manager that counts XLA compilations while active."""
+
+    def __init__(self):
+        self.events: list = []       # (event name, duration seconds)
+        self._tracked: dict = {}     # name -> jitted callable
+        self._active = False
+
+    # ------------------------------------------------------------- context
+    def __enter__(self) -> "CompileTracker":
+        def listener(name, duration, **kw):
+            if self._active and name.startswith(COMPILE_EVENT_PREFIX):
+                self.events.append((name, float(duration)))
+
+        self._listener = listener
+        self._active = True
+        jax.monitoring.register_event_duration_secs_listener(listener)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._active = False
+        _unregister_duration_listener(self._listener)
+
+    # ------------------------------------------------------- event stream
+    @property
+    def n_backend_compiles(self) -> int:
+        """Process-wide backend compilations observed while active."""
+        return sum(1 for n, _ in self.events if n == BACKEND_COMPILE_EVENT)
+
+    @property
+    def total_compile_s(self) -> float:
+        """Wall-clock spent in trace+lower+compile while active."""
+        return sum(d for _, d in self.events)
+
+    # -------------------------------------------------- tracked functions
+    def track(self, name: str, fn) -> None:
+        """Register a jitted callable whose compile count to pin."""
+        self._tracked[name] = fn
+
+    @staticmethod
+    def cache_size(fn) -> Optional[int]:
+        """Compile-cache entries of one jitted callable (None if the
+        jax internal that exposes it is unavailable)."""
+        size = getattr(fn, "_cache_size", None)
+        return None if size is None else int(size())
+
+    def counts(self) -> dict:
+        return {name: self.cache_size(fn)
+                for name, fn in self._tracked.items()}
+
+    def assert_counts(self, expected: dict) -> dict:
+        """Assert each tracked function compiled exactly N times.
+
+        Entries whose cache size is unreadable (jax upgrade) are
+        skipped — the guard must not fail because its probe vanished.
+        Returns the observed counts.
+        """
+        got = self.counts()
+        for name, want in expected.items():
+            n = got.get(name)
+            if n is not None:
+                assert n == want, (f"{name}: {n} compiled programs, "
+                                   f"expected {want}")
+        return got
+
+    # ------------------------------------------------------------ summary
+    def summary(self) -> dict:
+        """JSON-safe snapshot for run logs / bench rows."""
+        return {
+            "n_backend_compiles": self.n_backend_compiles,
+            "total_compile_s": round(self.total_compile_s, 4),
+            "tracked": self.counts(),
+        }

@@ -1,0 +1,78 @@
+"""Opt-in ``jax.profiler`` capture + named phase spans.
+
+Two complementary hooks, both zero-cost when unused:
+
+* ``trace_capture(outdir)`` — a context manager around
+  ``jax.profiler.start_trace``/``stop_trace``. The captured trace lands
+  under ``outdir`` as a Perfetto/TensorBoard artifact directory
+  (``tensorboard --logdir outdir`` or ui.perfetto.dev). Pass
+  ``enabled=False`` to turn the whole block into a no-op — callers can
+  thread a ``--trace`` flag without branching.
+* ``span(name)`` — a host-side ``jax.profiler.TraceAnnotation``: marks a
+  named region on the profiler timeline (dispatch, H2D/D2H, Python
+  overhead). Inside jit-traced code use ``phase(name)`` instead — a
+  ``jax.named_scope`` that names the emitted HLO, so compiled-program
+  profiles attribute device time to actor/critic/env/train phases (the
+  hook the kernel-layer work measures against).
+
+The rollout slot body tags its phases with ``phase("obs/...")``; the
+standard phase names are in ``PHASES`` so dashboards and tests can key
+on them.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+# Standard phase names used by the rollout slot body (driver._slot) and
+# the serve engine. Kernel benchmarks key on these when attributing
+# device time.
+PHASES = ("sample", "actor", "critic", "env_step", "train")
+
+
+def phase(name: str):
+    """Named scope for *traced* code: names the HLO ops under it.
+
+    Use inside jit/vmap/scan bodies; compiles to metadata only (no
+    runtime cost, no numerics change).
+    """
+    return jax.named_scope(f"obs/{name}")
+
+
+def span(name: str):
+    """Profiler annotation for *host-side* code (serving loop, bench
+    harnesses). Shows up as a named region in captured traces; ~free
+    when no trace is active."""
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:              # profiler unavailable on this backend
+        return contextlib.nullcontext()
+
+
+@contextlib.contextmanager
+def trace_capture(outdir: str, *, enabled: bool = True):
+    """Capture a jax profiler trace into ``outdir`` while the block runs.
+
+    ``enabled=False`` makes this a no-op so call sites can thread an
+    opt-in flag straight through. The directory is created; a capture
+    that fails to start (e.g. another trace already active) degrades to
+    a warning rather than killing the run — profiling must never take
+    down the job it observes.
+    """
+    if not enabled:
+        yield None
+        return
+    os.makedirs(outdir, exist_ok=True)
+    started = False
+    try:
+        jax.profiler.start_trace(outdir)
+        started = True
+    except Exception as e:          # pragma: no cover - env-dependent
+        print(f"[obs] profiler trace unavailable: {e}", flush=True)
+    try:
+        yield outdir if started else None
+    finally:
+        if started:
+            jax.profiler.stop_trace()

@@ -1,0 +1,310 @@
+"""Device-resident telemetry: named counters + fixed-bucket histograms.
+
+``rollout/metrics.py: CellMetrics`` reports eight pooled scalars per
+cell — enough for the paper's §VI-D tables, blind to the *distributions*
+that explain them: which early exits fire, where deadline misses
+concentrate, how the Eq-9/11 reward decomposes into communication /
+computation / accuracy terms. ``Telemetry`` is the generalization: a
+registry pytree of named scalar counters and fixed-bucket histograms,
+carried through the same ``lax.scan`` body the metrics accumulator
+already rides, updated with O(1) on-device ops per slot, and transferred
+to host **once** per episode (or once per pack, stacked on the cell
+axis).
+
+Design rules (the properties the tests pin):
+
+* Static shape — every leaf's shape/dtype is fixed by the registry at
+  ``init`` time, so the telemetry adds carry state but never a compile
+  key: a packed sweep with telemetry on is still 2 compiles.
+* Dtype-stable — all counts are float32, all edges float32, so
+  ``mode="loop"`` and ``mode="scan"`` produce identical pytrees
+  (bit-identical for every leaf not derived from the train loss; the
+  loss EMA matches to float32 rounding, same caveat as
+  ``CellMetrics.last_loss``).
+* Additive — counters are running sums, histogram updates are weighted
+  scatter-adds; both are order-independent per slot, so fleet pooling
+  and cell vmapping need no special cases.
+
+Units: histograms over task latency are in *deadline units* (t/deadline,
+dimensionless); time counters are seconds summed over active tasks;
+``replay_occ`` is a fraction in [0, 1] summed per slot (divide by
+``slots`` for the mean).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- histogram
+class Histogram(NamedTuple):
+    """Fixed-bucket histogram: K bins + explicit under/overflow.
+
+    ``edges`` is [K+1] float32 (constant data, not structure);
+    ``counts`` is [K+2] float32 — ``counts[0]`` is the underflow bin
+    (value < edges[0]), ``counts[K+1]`` the overflow bin
+    (value >= edges[K]), and ``counts[1 + i]`` the left-closed bin
+    [edges[i], edges[i+1]). A value exactly on an interior edge lands in
+    the bin it opens; a value exactly on the top edge overflows.
+    """
+    edges: jax.Array   # [K+1] float32
+    counts: jax.Array  # [K+2] float32 (underflow, K bins, overflow)
+
+
+def hist_init(edges) -> Histogram:
+    edges = jnp.asarray(edges, jnp.float32)
+    return Histogram(edges=edges,
+                     counts=jnp.zeros((edges.shape[0] + 1,), jnp.float32))
+
+
+def hist_add(h: Histogram, values: jax.Array,
+             weights: Optional[jax.Array] = None) -> Histogram:
+    """Fold ``values`` (any shape) into the histogram, O(1) on-device.
+
+    ``weights`` (same shape, default 1.0) scale each value's
+    contribution — pass the ``active`` mask to drop inactive tasks
+    without a gather. NaN values index the overflow bin; give them
+    weight 0 if they should not count.
+    """
+    v = values.reshape(-1).astype(jnp.float32)
+    w = (jnp.ones_like(v) if weights is None
+         else weights.reshape(-1).astype(jnp.float32))
+    # side='right': v == edges[i] -> index i+1 -> the bin [edges[i], ...)
+    idx = jnp.searchsorted(h.edges, v, side="right")
+    return h._replace(counts=h.counts.at[idx].add(w))
+
+
+def hist_to_host(h) -> dict:
+    """One histogram (or a [C]-stacked one) as JSON-ready lists."""
+    return {"edges": np.asarray(h.edges).tolist(),
+            "counts": np.asarray(h.counts).tolist()}
+
+
+def hist_quantile(edges, counts, q: float) -> float:
+    """Quantile estimate from bucket counts (host-side, numpy).
+
+    Linear interpolation inside the winning bucket; underflow mass is
+    treated as sitting at ``edges[0]`` and overflow at ``edges[-1]``
+    (so q inside those bins returns the boundary edge — a conservative
+    answer rather than an extrapolation). Returns NaN on an empty
+    histogram.
+    """
+    edges = np.asarray(edges, np.float64)
+    counts = np.asarray(counts, np.float64)
+    total = counts.sum()
+    if total <= 0:
+        return float("nan")
+    cum = np.cumsum(counts)
+    target = q * total
+    b = int(np.searchsorted(cum, target, side="left"))
+    b = min(b, len(counts) - 1)
+    if b == 0:                       # inside the underflow bin
+        return float(edges[0])
+    if b == len(counts) - 1:         # inside the overflow bin
+        return float(edges[-1])
+    lo, hi = edges[b - 1], edges[b]
+    prev = cum[b - 1] if b > 0 else 0.0
+    frac = (target - prev) / max(counts[b], 1e-12)
+    return float(lo + (hi - lo) * min(max(frac, 0.0), 1.0))
+
+
+# ----------------------------------------------------------------- registry
+class Telemetry(NamedTuple):
+    """The registry pytree: named counters, named histograms, loss EMA.
+
+    ``counters`` maps name -> float32 scalar running sum; ``hists`` maps
+    name -> ``Histogram``. Both dicts are ordinary pytree nodes — add a
+    metric by adding an entry at init and folding into it in an update —
+    and their key sets are static structure (fixed at init), so the
+    scan carry signature never changes shape mid-run. ``loss_ema`` is
+    the one non-additive slot: an exponential moving average of the
+    train loss (NaN until the first train step).
+    """
+    counters: dict
+    hists: dict
+    loss_ema: jax.Array   # float32 scalar
+
+
+def telemetry_init(counter_names, hist_edges) -> Telemetry:
+    """Fresh registry: zero counters + empty histograms.
+
+    ``counter_names`` is an iterable of names; ``hist_edges`` maps
+    name -> bucket edge array.
+    """
+    return Telemetry(
+        counters={n: jnp.zeros((), jnp.float32) for n in counter_names},
+        hists={n: hist_init(e) for n, e in hist_edges.items()},
+        loss_ema=jnp.full((), jnp.nan, jnp.float32),
+    )
+
+
+# How many latency/margin buckets the standard rollout registry uses.
+LATENCY_BINS = 16
+# EMA smoothing for the per-train-step loss (≈ 20-step horizon).
+LOSS_EMA_BETA = 0.9
+
+ROLLOUT_COUNTERS = (
+    "slots",            # slots accumulated
+    "tasks",            # active tasks seen
+    "success",          # tasks finished within deadline (Eq 11)
+    "t_com_s",          # Σ communication time over active tasks (Eq 1)
+    "t_wait_s",         # Σ FCFS queueing wait over active tasks (Eq 7)
+    "t_cmp_s",          # Σ inference compute time over active tasks (Eq 4)
+    "acc_potential",    # Σ φ(exit) over active tasks (accuracy term, Eq 5)
+    "psi_sum",          # Σ ψ(t/deadline) over active tasks (timeliness)
+    "reward",           # Σ φ·ψ over active tasks (realized Eq-9 utility)
+    "replay_occ",       # Σ per-slot replay-ring occupancy fraction
+    "train_steps",      # train steps taken
+)
+
+
+def rollout_telemetry(n_servers: int, n_exits: int) -> Telemetry:
+    """The standard registry carried by ``RolloutDriver``/sweep packs.
+
+    Histograms (fixed buckets, dimensionless):
+      exit     — decision counts per exit depth l ∈ [0, L)
+      server   — decision counts per edge server n ∈ [0, N)
+      latency  — t_total/deadline over active tasks, 16 bins on [0, 2]
+                 (1.0 is the deadline; overflow = misses by >2x)
+      margin   — (deadline - t_total)/deadline, 16 bins on [-1, 1]
+                 (negative = missed; underflow = missed by >2x or an
+                 unreachable link, t_total = inf)
+      replay_occ — ring occupancy fraction, 8 bins on [0, 1]
+    """
+    edges = {
+        "exit": jnp.arange(n_exits + 1, dtype=jnp.float32) - 0.5,
+        "server": jnp.arange(n_servers + 1, dtype=jnp.float32) - 0.5,
+        "latency": jnp.linspace(0.0, 2.0, LATENCY_BINS + 1),
+        "margin": jnp.linspace(-1.0, 1.0, LATENCY_BINS + 1),
+        "replay_occ": jnp.linspace(0.0, 1.0, 9),
+    }
+    return telemetry_init(ROLLOUT_COUNTERS, edges)
+
+
+def telemetry_update(tel: Telemetry, *, decisions: jax.Array,
+                     result, active: jax.Array, deadline_s,
+                     replay_frac: jax.Array, loss: jax.Array,
+                     n_exits: int) -> Telemetry:
+    """Fold one slot's batched outputs into the registry.
+
+    ``decisions``/``result`` leaves/``active`` carry any leading batch
+    axes (fleet [B], or none in the serve engine) over the device axis
+    [M]; everything is pooled — same convention as ``CellMetrics``.
+    ``deadline_s`` is a scalar or [B] (per-fleet scenarios) and
+    broadcasts; ``replay_frac`` is the shared learner's ring occupancy
+    in [0, 1]; ``loss`` is this slot's train loss (NaN when no train
+    step ran). All inputs are env outputs already computed by the slot
+    body — the update adds no new device round-trips.
+    """
+    act = active.astype(jnp.float32)
+    actb = act > 0.5
+    dl = jnp.asarray(deadline_s, jnp.float32)
+    dl = dl.reshape(dl.shape + (1,) * (result.t_total.ndim - dl.ndim))
+    t_total = result.t_total.astype(jnp.float32)
+    lat = t_total * (1.0 / dl)                       # deadline units
+    # ψ(t) = 1 - sigmoid(5 t/deadline): the Eq-9 soft-deadline term,
+    # recomputed here so reward = Σ φ·ψ decomposes visibly
+    psi = 1.0 - jax.nn.sigmoid(5.0 * lat)
+    psi = jnp.where(jnp.isinf(t_total), 0.0, psi)
+    phi = result.accuracy.astype(jnp.float32)
+    suc = (result.success & actb).astype(jnp.float32)
+    exit_idx = (decisions % n_exits).astype(jnp.float32)
+    srv_idx = (decisions // n_exits).astype(jnp.float32)
+    fin = jnp.isfinite(t_total)
+
+    c = dict(tel.counters)
+    c["slots"] = c["slots"] + 1.0
+    c["tasks"] = c["tasks"] + act.sum()
+    c["success"] = c["success"] + suc.sum()
+    # inf latencies (dead links) are misses, not time: keep the seconds
+    # counters finite by folding only reachable tasks
+    c["t_com_s"] = c["t_com_s"] + jnp.where(
+        actb & fin, result.t_com.astype(jnp.float32), 0.0).sum()
+    c["t_wait_s"] = c["t_wait_s"] + jnp.where(
+        actb & fin, result.t_wait.astype(jnp.float32), 0.0).sum()
+    c["t_cmp_s"] = c["t_cmp_s"] + jnp.where(
+        actb & fin, result.t_cmp.astype(jnp.float32), 0.0).sum()
+    c["acc_potential"] = c["acc_potential"] + (phi * act).sum()
+    c["psi_sum"] = c["psi_sum"] + (psi * act).sum()
+    c["reward"] = c["reward"] + (phi * psi * act).sum()
+    c["replay_occ"] = c["replay_occ"] + replay_frac.astype(jnp.float32)
+    trained = ~jnp.isnan(loss)
+    c["train_steps"] = c["train_steps"] + trained.astype(jnp.float32)
+
+    h = dict(tel.hists)
+    h["exit"] = hist_add(h["exit"], exit_idx, act)
+    h["server"] = hist_add(h["server"], srv_idx, act)
+    h["latency"] = hist_add(h["latency"], lat, act)
+    h["margin"] = hist_add(h["margin"], 1.0 - lat, act)
+    h["replay_occ"] = hist_add(h["replay_occ"],
+                               replay_frac.astype(jnp.float32))
+
+    loss32 = loss.astype(jnp.float32)
+    ema = jnp.where(jnp.isnan(tel.loss_ema), loss32,
+                    LOSS_EMA_BETA * tel.loss_ema
+                    + (1.0 - LOSS_EMA_BETA) * loss32)
+    ema = jnp.where(trained, ema, tel.loss_ema)
+    return Telemetry(counters=c, hists=h, loss_ema=ema)
+
+
+# ------------------------------------------------------------- host views
+def telemetry_host(tel: Telemetry, index: Optional[int] = None) -> dict:
+    """One device->host transfer of the whole registry, JSON-ready.
+
+    ``index`` slices a [C]-stacked pack telemetry down to one cell.
+    """
+    take = ((lambda x: np.asarray(x)) if index is None
+            else (lambda x: np.asarray(x)[index]))
+    return {
+        "counters": {k: float(take(v)) for k, v in tel.counters.items()},
+        "hists": {k: {"edges": take(h.edges).tolist(),
+                      "counts": take(h.counts).tolist()}
+                  for k, h in tel.hists.items()},
+        "loss_ema": float(take(tel.loss_ema)),
+    }
+
+
+def telemetry_summary(host: dict) -> dict:
+    """Derived headline numbers from a host-side registry dict.
+
+    Fractions are in [0, 1]; latency quantiles are in deadline units
+    (p50_latency = 0.5 means tasks typically finish at half the
+    deadline). ``*_share`` entries decompose Σ(t_com + t_wait + t_cmp);
+    ``exit_share``/``server_share`` are decision distributions.
+    """
+    c, hists = host["counters"], host["hists"]
+    tasks = max(c["tasks"], 1.0)
+    slots = max(c["slots"], 1.0)
+    t_sum = max(c["t_com_s"] + c["t_wait_s"] + c["t_cmp_s"], 1e-12)
+
+    def q(name, p):
+        h = hists[name]
+        return hist_quantile(h["edges"], h["counts"], p)
+
+    def share(name):
+        counts = np.asarray(hists[name]["counts"][1:-1], np.float64)
+        return (counts / max(counts.sum(), 1.0)).round(6).tolist()
+
+    out = {
+        "tasks": c["tasks"],
+        "deadline_hit_rate": c["success"] / tasks,
+        "avg_reward_per_task": c["reward"] / tasks,
+        "accuracy_potential_per_task": c["acc_potential"] / tasks,
+        "timeliness_per_task": c["psi_sum"] / tasks,
+        "comm_share": c["t_com_s"] / t_sum,
+        "wait_share": c["t_wait_s"] / t_sum,
+        "compute_share": c["t_cmp_s"] / t_sum,
+        "latency_p50": q("latency", 0.5),
+        "latency_p99": q("latency", 0.99),
+        "margin_p50": q("margin", 0.5),
+        "exit_share": share("exit"),
+        "server_share": share("server"),
+        "replay_occ_mean": c["replay_occ"] / slots,
+        "train_steps": c["train_steps"],
+        "loss_ema": (None if not np.isfinite(host["loss_ema"])
+                     else host["loss_ema"]),
+    }
+    return out

@@ -27,6 +27,7 @@ from repro.rollout.driver import (
     RolloutDriver,
     RolloutTrace,
     carry_metrics,
+    carry_telemetry,
     trace_metrics,
 )
 
@@ -36,5 +37,5 @@ __all__ = [
     "WorkloadGen", "WorkloadState", "make_workload",
     "CellMetrics", "metrics_init", "metrics_update", "metrics_finalize",
     "RolloutCarry", "RolloutDriver", "RolloutTrace", "carry_metrics",
-    "trace_metrics",
+    "carry_telemetry", "trace_metrics",
 ]

@@ -39,6 +39,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import AgentDef, AgentState
+from repro.obs.profile import phase
+from repro.obs.telemetry import (Telemetry, rollout_telemetry,
+                                 telemetry_host, telemetry_summary,
+                                 telemetry_update)
 from repro.rollout.metrics import (CellMetrics, metrics_init, metrics_update)
 from repro.rollout.vecenv import VecMECEnv
 from repro.rollout.workloads import WorkloadGen, WorkloadState, make_workload
@@ -52,6 +56,10 @@ class RolloutCarry(NamedTuple):
     dec_keys: jax.Array        # [B] per-fleet actor/exploration streams
     agent_state: AgentState    # the shared learner, one pytree
     metrics: CellMetrics       # running all-fleets-pooled summary
+    # rich telemetry registry (counters + histograms), None when the
+    # driver was built with telemetry=False — a missing pytree node, so
+    # the off path carries and computes nothing extra
+    telemetry: Optional[Telemetry] = None
 
     @property
     def params(self):
@@ -93,7 +101,8 @@ class RolloutDriver:
                  batch_size: Optional[int] = None,
                  train_every: Optional[int] = None,
                  per_fleet_scenarios: bool = False,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 telemetry: bool = False):
         if isinstance(agent, AgentDef):
             adef, self._shim = agent, None
         else:                         # legacy OffloadingAgent shim
@@ -119,6 +128,10 @@ class RolloutDriver:
         self.vec = VecMECEnv(self.env, n_fleets)
         self.workload = workload or make_workload(self.env)
         self.train = train
+        # static switch: True grows the carry by a Telemetry registry and
+        # adds the O(1) per-slot folds; False carries None (a missing
+        # pytree node — the compiled episode is unchanged)
+        self.telemetry = telemetry
         self.n_fleets = n_fleets
         self.batch_size = self.adef.batch_size
         self.train_every = self.adef.train_every
@@ -169,6 +182,8 @@ class RolloutDriver:
             dec_keys=self.vec.fleet_keys(k_dec),
             agent_state=agent_state,
             metrics=metrics_init(),
+            telemetry=(rollout_telemetry(self.env.N, self.env.L)
+                       if self.telemetry else None),
         )
 
     # ------------------------------------------------------------- slot body
@@ -183,10 +198,14 @@ class RolloutDriver:
         agent = carry.agent_state
 
         def fleet(env_state, wl_state, tk, dk, s):
-            wl_state, tasks = self.workload.sample(wl_state, tk, s)
-            decision, q_best, g = self.adef.decide(agent, env_state, tasks,
-                                                   dk, s)
-            new_state, result = self.env.step(env_state, tasks, decision, s)
+            with phase("sample"):
+                wl_state, tasks = self.workload.sample(wl_state, tk, s)
+            with phase("actor"):
+                decision, q_best, g = self.adef.decide(agent, env_state,
+                                                       tasks, dk, s)
+            with phase("env_step"):
+                new_state, result = self.env.step(env_state, tasks,
+                                                  decision, s)
             return wl_state, new_state, g, decision, result, q_best, \
                 tasks.active
 
@@ -197,7 +216,8 @@ class RolloutDriver:
 
         loss = jnp.full((), jnp.nan, jnp.float32)
         if self.train:
-            agent, loss = self.adef.absorb(agent, graphs, decisions)
+            with phase("train"):
+                agent, loss = self.adef.absorb(agent, graphs, decisions)
 
         # dtype-normalized outputs: identical between scan and loop modes
         decisions = decisions.astype(jnp.int32)
@@ -211,8 +231,18 @@ class RolloutDriver:
         metrics = metrics_update(carry.metrics, reward=reward,
                                  success=success, accuracy=accuracy,
                                  active=active, loss=loss)
+        telemetry = carry.telemetry
+        if telemetry is not None:
+            deadline = (sp.deadline_s if sp is not None
+                        else self.env.params.deadline_s)
+            replay_frac = (agent.replay.size.astype(jnp.float32)
+                           / float(self.replay_capacity))
+            telemetry = telemetry_update(
+                telemetry, decisions=decisions, result=results,
+                active=active, deadline_s=deadline,
+                replay_frac=replay_frac, loss=loss, n_exits=self.env.L)
         new_carry = RolloutCarry(env_state, wl_state, task_keys, dec_keys,
-                                 agent, metrics)
+                                 agent, metrics, telemetry)
         out = RolloutTrace(decisions, reward, success, accuracy, active,
                            q_best, loss)
         return new_carry, out
@@ -269,7 +299,8 @@ class RolloutDriver:
                        task_keys=carry.task_keys, dec_keys=carry.dec_keys)
         batched = shard_leading_axis(batched, mesh)
         rest = replicate(
-            dict(agent_state=carry.agent_state, metrics=carry.metrics), mesh)
+            dict(agent_state=carry.agent_state, metrics=carry.metrics,
+                 telemetry=carry.telemetry), mesh)
         carry = RolloutCarry(**batched, **rest)
         # per-fleet scenarios ride the fleet axis; a shared sp replicates
         if sp is not None:
@@ -320,6 +351,23 @@ def carry_metrics(carry: RolloutCarry, *, slot_s: float,
     if not np.isfinite(out["final_loss"]):
         out["final_loss"] = None
     return out
+
+
+def carry_telemetry(carry: RolloutCarry, *, index: Optional[int] = None,
+                    summarize: bool = True) -> Optional[dict]:
+    """Host-side view of the carry's telemetry registry (one transfer).
+
+    Returns None when the driver ran with ``telemetry=False``. ``index``
+    slices a cell-stacked pack carry down to one cell; ``summarize``
+    adds the derived headline dict (p50/p99 latency, deadline-hit rate,
+    reward decomposition) under ``"summary"``.
+    """
+    if carry.telemetry is None:
+        return None
+    host = telemetry_host(carry.telemetry, index=index)
+    if summarize:
+        host["summary"] = telemetry_summary(host)
+    return host
 
 
 def trace_metrics(trace: RolloutTrace, *, slot_s: float) -> dict:

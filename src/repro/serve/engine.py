@@ -35,6 +35,9 @@ from repro.mec.metrics import RunningMetrics
 from repro.mec.profiles import llm_exit_profile
 from repro.models.config import ArchConfig
 from repro.models.lm import model_for
+from repro.obs.telemetry import (hist_quantile, rollout_telemetry,
+                                 telemetry_host, telemetry_summary,
+                                 telemetry_update)
 from repro.rollout.workloads import make_workload
 from repro.train.steps import make_serve_step
 
@@ -139,6 +142,15 @@ class EdgeServingEngine:
         self._agent_step = (jax.jit(self.agent_def.step)
                             if self.agent_def is not None else None)
         self.metrics = RunningMetrics(slot_s=mec_cfg.slot_s)
+        # device-resident request telemetry ([M]-batched updates, pulled
+        # to host only by telemetry_snapshot) + host transfer counters
+        self.telemetry = rollout_telemetry(self.env.N, self.env.L)
+        self.transfers = {"decode_h2d": 0, "decode_d2h": 0,
+                          "telemetry_pulls": 0}
+        self._tel_update = jax.jit(
+            lambda tel, dec, res, act, dl, rf, loss: telemetry_update(
+                tel, decisions=dec, result=res, active=act, deadline_s=dl,
+                replay_frac=rf, loss=loss, n_exits=self.env.L))
 
         # one compiled decode step per (replica, exit) — exit is static
         self._steps = {
@@ -148,28 +160,47 @@ class EdgeServingEngine:
         self._key = key
 
     # ------------------------------------------------------------- decoding
-    def _decode(self, requests: list[Request], exit_layer: int) -> np.ndarray:
-        """Greedy-decode a batch at the given exit depth."""
+    def _decode(self, requests: list[Request], exit_layer: int) -> list:
+        """Greedy-decode a batch at the given exit depth.
+
+        Observations stay device-side: the padded prompt matrix goes up
+        in **one** host->device transfer, every per-position input is a
+        device-side select between the next prompt column and the token
+        just generated (teacher-forcing while inside each prompt), and
+        the generated tokens come back in **one** device->host transfer
+        at the end. ``transfers`` counts both — the old path re-built a
+        host array per decode position, forcing a round-trip each step.
+        """
         b = len(requests)
         cache = self.model.init_cache(self.cfg, b, self.cache_len)
-        prompts = [r.tokens for r in requests]
-        max_prompt = max(len(p) for p in prompts)
-        outs = [[] for _ in requests]
-        toks = np.zeros((b,), np.int32)
+        prompts = [np.asarray(r.tokens, np.int32) for r in requests]
+        lens = np.array([len(p) for p in prompts], np.int32)
+        total = int(lens.max()) + max(r.max_new for r in requests)
+        mat = np.zeros((b, total), np.int32)
+        for i, p in enumerate(prompts):
+            mat[i, : len(p)] = p
+        prompt_mat = jnp.asarray(mat)              # the one h2d transfer
+        lens_d = jnp.asarray(lens)
+        self.transfers["decode_h2d"] += 1
         step = self._steps[exit_layer]
-        for pos in range(max_prompt + max(r.max_new for r in requests)):
-            cur = np.array([
-                p[pos] if pos < len(p) else
-                (outs[i][-1] if outs[i] else 0)
-                for i, p in enumerate(prompts)], np.int32)
-            logits, cache = step(self.params, cache,
-                                 jnp.asarray(cur),
+        cur = prompt_mat[:, 0]
+        toks = []
+        for pos in range(total):
+            logits, cache = step(self.params, cache, cur,
                                  jnp.full((b,), pos, jnp.int32))
-            nxt = np.asarray(jnp.argmax(logits, -1))
-            for i in range(b):
-                if pos >= len(prompts[i]) - 1 and len(outs[i]) < requests[i].max_new:
-                    outs[i].append(int(nxt[i]))
-        return outs
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(nxt)
+            if pos + 1 < total:
+                cur = jnp.where(pos + 1 < lens_d,
+                                prompt_mat[:, pos + 1], nxt)
+        gen = np.asarray(jnp.stack(toks, axis=1))  # the one d2h transfer
+        self.transfers["decode_d2h"] += 1
+        # request i's outputs are the argmaxes at positions
+        # len(p)-1 .. len(p)-1+max_new-1 (same schedule as the per-slot
+        # host loop this replaces)
+        return [[int(t) for t in
+                 gen[i, lens[i] - 1: lens[i] - 1 + r.max_new]]
+                for i, r in enumerate(requests)]
 
     # -------------------------------------------------------------- serving
     def set_scenario_params(self, sp: Optional[ScenarioParams]) -> None:
@@ -216,6 +247,27 @@ class EdgeServingEngine:
                     f"{jnp.shape(a)}")
         self.agent_state = state
 
+    def telemetry_snapshot(self) -> dict:
+        """Host view of the request telemetry (one device->host pull).
+
+        ``summary`` carries the derived headline numbers
+        (``deadline_hit_rate``, ``latency_p50``/``latency_p99`` in
+        deadline units plus ``latency_p50_s``/``latency_p99_s`` converted
+        with the engine's configured deadline, decision shares, reward
+        decomposition); ``transfers`` counts the engine's host<->device
+        round-trips (decode uploads/downloads, telemetry pulls).
+        """
+        host = telemetry_host(self.telemetry)
+        summary = telemetry_summary(host)
+        dl = float(self.env.cfg.deadline_s)
+        lat = host["hists"]["latency"]
+        for q, name in ((0.5, "latency_p50_s"), (0.99, "latency_p99_s")):
+            summary[name] = hist_quantile(lat["edges"], lat["counts"], q) * dl
+        host["summary"] = summary
+        self.transfers["telemetry_pulls"] += 1
+        host["transfers"] = dict(self.transfers)
+        return host
+
     def make_request(self, prompt_len: int = 8, max_new: int = 8) -> Request:
         """Synthetic request for arrival-driven serving."""
         toks = self._req_rng.integers(0, self.cfg.vocab, prompt_len)
@@ -251,16 +303,26 @@ class EdgeServingEngine:
                 act[: len(requests)] = 1.0
                 tasks = tasks._replace(active=jnp.asarray(act))
         if self.agent_def is not None:
-            self.agent_state, decision, _ = self._agent_step(
+            self.agent_state, decision, aux = self._agent_step(
                 self.agent_state, self.mec_state, tasks, None, self._sp)
+            loss = aux.loss
+            replay_frac = (self.agent_state.replay.size.astype(jnp.float32)
+                           / float(self.agent_def.buffer_size))
         else:  # static: final exit, round-robin replica
             L = self.env.L
             decision = jnp.asarray(
                 [(i % self.env.N) * L + (L - 1)
                  for i in range(self.batch_slots)], jnp.int32)
+            loss = jnp.full((), jnp.nan, jnp.float32)
+            replay_frac = jnp.zeros((), jnp.float32)
         self.mec_state, result = self.env.step(self.mec_state, tasks, decision,
                                                self._sp)
         self.metrics.update(result, tasks.active)
+        deadline = (self._sp.deadline_s if self._sp is not None
+                    else self.env.params.deadline_s)
+        self.telemetry = self._tel_update(self.telemetry, decision, result,
+                                          tasks.active, deadline,
+                                          replay_frac, loss)
 
         decision = np.asarray(decision)
         assignments = []

@@ -28,12 +28,13 @@ from repro.sweep.spec import Cell, SweepSpec, cell_keys
 from repro.sweep.packer import Pack, pack_cells
 from repro.sweep.runner import run_cell, run_pack, run_sweep
 from repro.sweep.store import SweepStore
-from repro.sweep.report import build_report, format_markdown, write_report
+from repro.sweep.report import (build_report, format_markdown,
+                                format_telemetry, write_report)
 
 __all__ = [
     "Cell", "SweepSpec", "cell_keys",
     "Pack", "pack_cells",
     "run_cell", "run_pack", "run_sweep",
     "SweepStore",
-    "build_report", "format_markdown", "write_report",
+    "build_report", "format_markdown", "format_telemetry", "write_report",
 ]

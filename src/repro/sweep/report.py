@@ -13,6 +13,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.log import json_safe
+
 METRIC_KEYS = ("avg_accuracy", "ssp", "deadline_miss", "throughput_tps",
                "avg_reward")
 RATIO_KEYS = ("avg_accuracy", "throughput_tps", "ssp")
@@ -21,7 +23,13 @@ BASELINES = ("grl", "drooe", "droo")
 
 
 def _mean_std(rows, key):
-    vals = np.asarray([r[key] for r in rows], np.float64)
+    # None (e.g. final_loss before any train step) and non-finite values
+    # are dropped, never averaged or serialized as NaN
+    vals = np.asarray([r[key] for r in rows
+                       if r.get(key) is not None], np.float64)
+    vals = vals[np.isfinite(vals)]
+    if vals.size == 0:
+        return {"mean": None, "std": None, "n": 0}
     return {"mean": round(float(vals.mean()), 6),
             "std": round(float(vals.std()), 6),
             "n": int(vals.size)}
@@ -42,7 +50,7 @@ def build_report(rows) -> dict:
     }}
     for name in sorted(scenarios):
         methods = {
-            m: {k: _mean_std(rs, k) for k in METRIC_KEYS}
+            m: {k: _mean_std(rs, k) for k in METRIC_KEYS + ("final_loss",)}
             for m, rs in sorted(scenarios[name].items())
         }
         ratios: dict = {}
@@ -59,8 +67,8 @@ def build_report(rows) -> dict:
     return out
 
 
-def _ratio(num: float, den: float) -> Optional[float]:
-    if den == 0:
+def _ratio(num: Optional[float], den: Optional[float]) -> Optional[float]:
+    if num is None or den is None or den == 0:
         return None
     return round(num / den, 4)
 
@@ -74,7 +82,8 @@ def format_markdown(report: dict) -> str:
                      "| throughput_tps | avg_reward |")
         lines.append("|---|---|---|---|---|---|")
         for method, stats in sc["methods"].items():
-            cells = [f"{stats[k]['mean']:.4f} ± {stats[k]['std']:.4f}"
+            cells = [(f"{stats[k]['mean']:.4f} ± {stats[k]['std']:.4f}"
+                      if stats[k]["mean"] is not None else "n/a")
                      for k in METRIC_KEYS]
             lines.append("| " + " | ".join([method] + cells) + " |")
         for pair, vals in sc["ratios"].items():
@@ -86,8 +95,46 @@ def format_markdown(report: dict) -> str:
     return "\n".join(lines)
 
 
+TELEMETRY_COLUMNS = (
+    ("deadline_hit_rate", "hit"),
+    ("latency_p50", "lat_p50"),
+    ("latency_p99", "lat_p99"),
+    ("comm_share", "comm"),
+    ("wait_share", "wait"),
+    ("compute_share", "comp"),
+    ("replay_occ_mean", "replay"),
+    ("loss_ema", "loss_ema"),
+)
+
+
+def format_telemetry(rows) -> str:
+    """Per-cell telemetry summaries -> one markdown table.
+
+    Rows without a ``telemetry`` entry (sweep ran with telemetry off, or
+    cached pre-telemetry results) are skipped; latencies are in deadline
+    units; ``exits`` shows each cell's decision share per exit depth.
+    """
+    rows = [r for r in rows if r.get("telemetry")]
+    if not rows:
+        return "(no telemetry in these rows)"
+    heads = [h for _, h in TELEMETRY_COLUMNS]
+    lines = ["| cell | " + " | ".join(heads) + " | exits |",
+             "|" + "---|" * (len(heads) + 2)]
+    for r in rows:
+        s = r["telemetry"]["summary"]
+        cells = [(f"{s[k]:.3f}" if isinstance(s.get(k), float) else "n/a")
+                 for k, _ in TELEMETRY_COLUMNS]
+        exits = "/".join(f"{x:.2f}" for x in s.get("exit_share", []))
+        label = f"{r['scenario']}/{r['method']}/s{r['seed']}"
+        lines.append("| " + " | ".join([label] + cells + [exits]) + " |")
+    return "\n".join(lines)
+
+
 def write_report(report: dict, path: str) -> str:
-    """Deterministic JSON dump (sorted keys, rounded floats upstream)."""
+    """Deterministic, strict JSON dump: sorted keys, NaN/inf scrubbed to
+    null (``allow_nan=False`` guarantees no bare ``NaN`` token can leak
+    into stored reports)."""
     with open(path, "w") as f:
-        json.dump(report, f, sort_keys=True, indent=1)
+        json.dump(json_safe(report), f, sort_keys=True, indent=1,
+                  allow_nan=False)
     return path

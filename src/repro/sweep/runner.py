@@ -31,7 +31,10 @@ import numpy as np
 from repro.core.policy import AgentDef, agent_def
 from repro.mec.env import MECEnv
 from repro.mec.scenarios import make_scenario
-from repro.rollout.driver import RolloutDriver, carry_metrics
+from repro.obs.log import json_safe
+from repro.obs.telemetry import telemetry_host, telemetry_summary
+from repro.rollout.driver import (RolloutDriver, carry_metrics,
+                                  carry_telemetry)
 from repro.rollout.metrics import metrics_finalize
 from repro.sharding.fleet import pad_to_devices, shard_leading_axis
 from repro.sweep.packer import Pack, pack_cells
@@ -79,14 +82,17 @@ class PackProgram:
     """
 
     def __init__(self, pack: Pack, *, mesh=None,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 telemetry: bool = False):
         self.pack = pack
         cells = list(pack.cells)
         ref = cells[0]
         env = _scenario_env(ref)
         adef = _cell_def(ref, env, actor=pack.family, use_pallas=use_pallas)
-        drv = RolloutDriver(adef, n_fleets=ref.n_fleets)
+        drv = RolloutDriver(adef, n_fleets=ref.n_fleets,
+                            telemetry=telemetry)
         self._env = env
+        self._telemetry = telemetry
 
         pkeys = jnp.stack([cell_keys(c)[0] for c in cells])
         rkeys = jnp.stack([cell_keys(c)[1] for c in cells])
@@ -121,50 +127,66 @@ class PackProgram:
                 return new_c, None
 
             final, _ = jax.lax.scan(step, cs, None, length=ref.n_slots)
-            return jax.vmap(lambda m: metrics_finalize(
+            fin = jax.vmap(lambda m: metrics_finalize(
                 m, slot_s=env.cfg.slot_s,
                 n_fleets=ref.n_fleets))(final.metrics)
+            # cell-stacked registry rides out with the scalar rows — the
+            # telemetry leg still costs one host transfer per pack
+            return fin, final.telemetry
 
         self._episode = jax.jit(episode)
 
     def run(self) -> list:
         """Execute the episode; one metrics row per cell, in pack order."""
-        metrics = self._episode(self._carries, self._sps)
+        metrics, tel = self._episode(self._carries, self._sps)
         metrics = {k: np.asarray(v) for k, v in metrics.items()}
+        tel = jax.device_get(tel)  # [C]-stacked registry, one transfer
         rows = []
         for i, cell in enumerate(self.pack.cells):
             row = {k: float(v[i]) for k, v in metrics.items()}
+            if tel is not None:
+                host = telemetry_host(tel, index=i)
+                host["summary"] = telemetry_summary(host)
+                row["telemetry"] = json_safe(host)
             rows.append(_finish_row(row, cell))
         return rows
 
 
 def run_pack(pack: Pack, *, mesh=None,
-             use_pallas: Optional[bool] = None) -> list:
+             use_pallas: Optional[bool] = None,
+             telemetry: bool = False) -> list:
     """Run every cell of a pack in one vmapped (optionally sharded) episode.
 
-    Returns one metrics row per cell, in pack order.
+    Returns one metrics row per cell, in pack order. ``telemetry=True``
+    attaches each cell's registry snapshot + summary under
+    ``row["telemetry"]`` (JSON-safe).
     """
-    return PackProgram(pack, mesh=mesh, use_pallas=use_pallas).run()
+    return PackProgram(pack, mesh=mesh, use_pallas=use_pallas,
+                       telemetry=telemetry).run()
 
 
 # -------------------------------------------------------------- sequential
-def run_cell(cell: Cell, *, use_pallas: Optional[bool] = None) -> dict:
+def run_cell(cell: Cell, *, use_pallas: Optional[bool] = None,
+             telemetry: bool = False) -> dict:
     """One cell through a plain ``RolloutDriver`` (reference/baseline)."""
     env = _scenario_env(cell)
     pkey, rkey = cell_keys(cell)
     adef = _cell_def(cell, env, use_pallas=use_pallas)
-    drv = RolloutDriver(adef, n_fleets=cell.n_fleets)
+    drv = RolloutDriver(adef, n_fleets=cell.n_fleets, telemetry=telemetry)
     carry, _ = drv.run(rkey, cell.n_slots, mode="scan",
                        agent_state=adef.init(pkey))
     row = carry_metrics(carry, slot_s=env.cfg.slot_s,
                         n_fleets=cell.n_fleets)
+    if telemetry:
+        row["telemetry"] = json_safe(carry_telemetry(carry))
     return _finish_row(row, cell)
 
 
 # ------------------------------------------------------------------- sweep
 def run_sweep(spec: SweepSpec, *, store: Optional[SweepStore] = None,
               mesh=None, packed: bool = True, log=print,
-              use_pallas: Optional[bool] = None) -> list:
+              use_pallas: Optional[bool] = None,
+              telemetry: bool = False) -> list:
     """Run the whole grid; returns rows in ``spec.expand()`` order.
 
     With a store, finished cells are loaded instead of recomputed and
@@ -188,9 +210,11 @@ def run_sweep(spec: SweepSpec, *, store: Optional[SweepStore] = None,
             continue
         log(f"  [sweep] {pack.label()}: running "
             f"({len(pack.cells) - len(missing)} cached)")
-        # None (the default) is omitted so monkeypatched/legacy runners
-        # with the pre-switch signature keep working
+        # defaults are omitted so monkeypatched/legacy runners with the
+        # pre-switch signature keep working
         kw = {} if use_pallas is None else {"use_pallas": use_pallas}
+        if telemetry:
+            kw["telemetry"] = True
         if packed:
             # the whole pack runs (one compiled episode), but cached cells
             # keep their stored rows — never recomputed results

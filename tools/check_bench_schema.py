@@ -1,0 +1,104 @@
+"""Validate the committed BENCH_*.json benchmark records.
+
+    python tools/check_bench_schema.py [files...]
+
+With no arguments checks every BENCH_*.json at the repo root. Each file
+must be a non-empty JSON array of row objects; every row needs a unique
+non-empty ``name`` and a ``derived`` provenance string, plus at least one
+measurement key appropriate to its row family:
+
+  throughput rows — one of ``steps_per_s`` / ``cells_per_s`` /
+                    ``us_per_call`` / ``wall_s`` (finite, positive)
+  guard rows (``*_guard``) — ``packs`` and ``cells`` (positive ints)
+
+Strict JSON is enforced (a bare ``NaN``/``Infinity`` token fails), so a
+benchmark writer that serializes a non-finite measurement breaks CI here
+rather than downstream consumers. Exit code 1 on any violation.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MEASUREMENT_KEYS = ("steps_per_s", "cells_per_s", "us_per_call", "wall_s")
+
+
+def check_rows(path: str, rows) -> list:
+    errors = []
+
+    def err(msg, i=None):
+        where = f"{os.path.basename(path)}" + (f"[{i}]" if i is not None
+                                               else "")
+        errors.append(f"{where}: {msg}")
+
+    if not isinstance(rows, list) or not rows:
+        err("must be a non-empty JSON array of row objects")
+        return errors
+    names = set()
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            err("row is not an object", i)
+            continue
+        name = row.get("name")
+        if not isinstance(name, str) or not name:
+            err("missing/empty 'name'", i)
+            continue
+        if name in names:
+            err(f"duplicate name {name!r}", i)
+        names.add(name)
+        if not isinstance(row.get("derived"), str):
+            err(f"{name}: missing 'derived' provenance string", i)
+        if name.endswith("_guard"):
+            for key in ("packs", "cells"):
+                v = row.get(key)
+                if not isinstance(v, int) or v <= 0:
+                    err(f"{name}: '{key}' must be a positive int, "
+                        f"got {v!r}", i)
+            continue
+        measured = [k for k in MEASUREMENT_KEYS if k in row]
+        if not measured:
+            err(f"{name}: no measurement key "
+                f"(one of {', '.join(MEASUREMENT_KEYS)})", i)
+        for key in measured:
+            v = row[key]
+            ok = (isinstance(v, (int, float)) and not isinstance(v, bool)
+                  and math.isfinite(v) and v > 0)
+            if not ok:
+                err(f"{name}: '{key}' must be a finite positive number, "
+                    f"got {v!r}", i)
+    return errors
+
+
+def check_file(path: str) -> list:
+    try:
+        with open(path) as f:
+            # strict JSON: a serialized NaN/Infinity is a schema error
+            rows = json.load(f, parse_constant=lambda c: (_ for _ in ()).
+                             throw(ValueError(f"non-finite literal {c}")))
+    except (OSError, ValueError) as e:
+        return [f"{os.path.basename(path)}: unreadable JSON ({e})"]
+    return check_rows(path, rows)
+
+
+def main(argv) -> int:
+    paths = argv or sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not paths:
+        print("check_bench_schema: no BENCH_*.json files found")
+        return 1
+    failures = []
+    for path in paths:
+        failures += check_file(path)
+    for msg in failures:
+        print(f"check_bench_schema: {msg}")
+    if not failures:
+        print(f"check_bench_schema: {len(paths)} file(s) OK "
+              f"({', '.join(os.path.basename(p) for p in paths)})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
