@@ -10,9 +10,16 @@ import numpy as np
 
 from repro.core import make_agent
 from repro.mec import MECEnv, RunningMetrics, make_scenario
+from repro.obs.history import default_store, history_manifest
+from repro.obs.log import git_rev
 
 METHODS = ("grle", "grl", "drooe", "droo")
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+# Row keys that are labels/counts, not measurements — excluded from the
+# metric set a history record carries.
+NON_METRIC_KEYS = ("backend", "n_jax_devices", "git_rev", "packs",
+                   "cells", "compiled_programs")
 
 
 def timed(fn, *args, **kwargs):
@@ -22,6 +29,9 @@ def timed(fn, *args, **kwargs):
     ``jax.block_until_ready`` on the result, so async dispatch can't
     make a path look faster than the device work it queued. Use a
     monotonic wall clock (``perf_counter``), never ``time.time``.
+    Rows measured with it and written via ``save_rows``/
+    ``merge_bench_rows`` are stamped (backend, jax device count, git
+    rev) and appended to the run-history store automatically.
     """
     t0 = time.perf_counter()
     out = fn(*args, **kwargs)
@@ -70,17 +80,71 @@ def sweep_methods(scenario: str, *, device_counts, slot_lengths_ms, slots,
     return rows
 
 
-def save_rows(name: str, rows) -> str:
+def stamp_rows(rows) -> list:
+    """Stamp every row with where it was measured: jax backend, jax
+    device count (``n_jax_devices`` — ``n_devices`` already means IoT
+    devices M in the paper rows) and git revision. History comparisons
+    filter on these, so a laptop number never gates a TPU trend."""
+    backend = jax.default_backend()
+    n_dev = jax.device_count()
+    rev = git_rev()
+    for row in rows:
+        row.setdefault("backend", backend)
+        row.setdefault("n_jax_devices", n_dev)
+        row.setdefault("git_rev", rev)
+    return rows
+
+
+def _row_label(name: str, row: dict) -> str:
+    """A stable history name for one row: its own ``name`` if present,
+    else the module/method-M-tau label the CSV digest uses."""
+    if row.get("name"):
+        return str(row["name"])
+    return (f"{name}/{row.get('method', 'row')}-M{row.get('n_devices', '')}"
+            f"-t{row.get('slot_ms', '')}")
+
+
+def record_rows(name: str, rows, *, history=None) -> None:
+    """Append one manifest-stamped ``bench`` history record per row.
+
+    ``history=None`` uses the env-configured store (``REPRO_HISTORY``,
+    default ``results/history``; empty string disables). The record's
+    metric set is every finite numeric row entry except the provenance
+    stamps, so any measurement key (``us_per_call``, ``steps_per_s``,
+    ``flops``, ...) lands in the trend automatically.
+    """
+    store = history if history is not None else default_store()
+    if store is None:
+        return
+    manifest = history_manifest()
+    for row in rows:
+        metrics = {k: v for k, v in row.items()
+                   if k not in NON_METRIC_KEYS
+                   and isinstance(v, (int, float))
+                   and not isinstance(v, bool) and np.isfinite(v)}
+        if not metrics:
+            continue
+        store.append("bench", _row_label(name, row), metrics,
+                     manifest=manifest,
+                     derived=row.get("derived", ""))
+
+
+def save_rows(name: str, rows, *, history=None) -> str:
+    """Write ``results/<name>.json`` and append the rows to run history."""
+    stamp_rows(rows)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
+    record_rows(name, rows, history=history)
     return path
 
 
 def merge_bench_rows(path: str, new_rows) -> None:
     """Refresh only the rows whose names ``new_rows`` re-measured,
-    preserving every other row of the committed BENCH_*.json."""
+    preserving every other row of the committed BENCH_*.json; the
+    re-measured rows also append to run history."""
+    stamp_rows(new_rows)
     names = {r["name"] for r in new_rows}
     kept = []
     if os.path.exists(path):
@@ -88,6 +152,8 @@ def merge_bench_rows(path: str, new_rows) -> None:
             kept = [r for r in json.load(f) if r.get("name") not in names]
     with open(path, "w") as f:
         json.dump(kept + new_rows, f, indent=1)
+    base = os.path.splitext(os.path.basename(path))[0]
+    record_rows(base, new_rows)
 
 
 def assert_two_compile_packs(scenarios: str, seeds: int, *, n_devices=4,

@@ -1,0 +1,48 @@
+"""Static cost attribution of the hot compiled programs.
+
+    PYTHONPATH=src python -m benchmarks.cost_attribution [--quick]
+
+Reports XLA's own cost model for the three programs the ROADMAP's
+kernel work is judged against — the ``RolloutDriver`` slot body, a
+``PackProgram`` sweep episode, and the serve decode step: FLOPs, bytes
+accessed, arithmetic intensity (FLOPs/byte) and buffer sizes, from
+``lowered.compile().cost_analysis()``/``memory_analysis()``
+(``repro.obs.cost``). Unlike the wall-clock rows these are deterministic
+per (revision, backend, shape) — a Pallas backward or a bf16 actor
+variant shows up as a step change in the history trend, noise-free.
+
+Rows land in ``results/cost_attribution.json`` and (like every
+benchmark) as manifest-stamped records in ``results/history/``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import save_rows
+from repro.obs.cost import hot_program_costs
+
+
+def run(quick: bool = False):
+    costs = hot_program_costs(quick=quick)
+    rows = []
+    for prog, cost in costs.items():
+        row = {"name": f"cost/{prog}",
+               "derived": cost.get("derived", prog)}
+        for k in ("flops", "bytes_accessed", "arithmetic_intensity",
+                  "argument_bytes", "output_bytes", "temp_bytes"):
+            if cost.get(k) is not None:
+                row[k] = cost[k]
+        rows.append(row)
+        fmt = lambda v: "n/a" if v is None else f"{v:.3e}"
+        print(f"  {row['name']:22s} flops={fmt(cost.get('flops'))}  "
+              f"bytes={fmt(cost.get('bytes_accessed'))}  "
+              f"ai={cost.get('arithmetic_intensity')}  {row['derived']}",
+              flush=True)
+    save_rows("cost_attribution", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -14,6 +14,13 @@
 | roofline            | deliverable (g), from the dry-run  |
 | rollout_throughput  | scan-fused vs per-slot loop        |
 | sweep_throughput    | packed sweep vs per-cell loop      |
+| cost_attribution    | FLOPs/bytes of the hot programs    |
+
+Every saved row is stamped (backend, jax device count, git rev) and
+appended to the run-history store (``results/history/``) for cross-run
+trend/regression tracking (``python -m repro.launch history``,
+``tools/check_perf_regression.py``). ``--only`` with an unknown module
+name is an error, not a silent skip.
 """
 from __future__ import annotations
 
@@ -78,15 +85,20 @@ def bench_kernels(quick: bool = False):
 
 BENCHES = ("exit_profile", "convergence", "vary_devices", "vary_capacity",
            "vary_inference_time", "imperfect_csi", "kernels", "roofline",
-           "rollout_throughput", "sweep_throughput")
+           "rollout_throughput", "sweep_throughput", "cost_attribution")
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default="")
-    args = ap.parse_args()
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated subset of: {', '.join(BENCHES)}")
+    args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else set(BENCHES)
+    unknown = sorted(only - set(BENCHES))
+    if unknown:
+        ap.error(f"unknown benchmark module(s): {', '.join(unknown)} "
+                 f"(choose from {', '.join(BENCHES)})")
 
     print("name,us_per_call,derived")
     all_rows = {}
@@ -132,6 +144,10 @@ def main() -> None:
             elif "dominant" in r:
                 print(f"{name}/{r['arch']}-{r['shape']},,dom={r['dominant']};"
                       f"useful={r['useful_fraction']:.2f}")
+            elif "flops" in r:
+                print(f"{r['name']},,flops={r['flops']:.3e};"
+                      f"bytes={r.get('bytes_accessed', 0):.3e};"
+                      f"ai={r.get('arithmetic_intensity', '')}")
 
 
 if __name__ == "__main__":

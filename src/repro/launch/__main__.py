@@ -6,6 +6,7 @@ Commands:
   train    LLM training-step driver
   dryrun   multi-pod compile dry-run
   profile  instrumented rollout: telemetry + compile/trace capture + JSONL log
+  history  run-history trend tables + noise-aware regression verdicts
 
 ``python -m repro.launch.serve`` style module paths keep working; this
 entry point just gives the drivers one front door.
@@ -16,7 +17,7 @@ import sys
 
 
 def main() -> None:
-    commands = ("sweep", "serve", "train", "dryrun", "profile")
+    commands = ("sweep", "serve", "train", "dryrun", "profile", "history")
     if len(sys.argv) < 2 or sys.argv[1] in ("-h", "--help"):
         print(__doc__)
         raise SystemExit(0 if len(sys.argv) >= 2 else 2)
@@ -30,6 +31,10 @@ def main() -> None:
         return
     if cmd == "profile":
         from repro.launch.profile import main as run
+        run(argv)
+        return
+    if cmd == "history":
+        from repro.launch.history import main as run
         run(argv)
         return
     # legacy drivers parse sys.argv directly

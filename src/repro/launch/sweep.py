@@ -51,6 +51,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="carry the device-resident telemetry registry "
                          "(exit/latency histograms, reward decomposition) "
                          "and print the per-cell table")
+    ap.add_argument("--history", nargs="?", const="default", default="",
+                    help="append one manifest-stamped history record per "
+                         "executed cell (optional value: store dir; bare "
+                         "flag uses REPRO_HISTORY/results/history)")
     return ap
 
 
@@ -70,9 +74,16 @@ def main(argv=None) -> dict:
           + (f", cell axis over {mesh.devices.size} devices" if mesh
              else ", single device (vmap fallback)"), flush=True)
 
+    history = None
+    if args.history:
+        from repro.obs.history import HistoryStore, default_store
+        history = (default_store() if args.history == "default"
+                   else HistoryStore(args.history))
     rows = run_sweep(spec, store=store, mesh=mesh,
                      packed=not args.sequential,
-                     telemetry=args.telemetry)
+                     telemetry=args.telemetry, history=history)
+    if history is not None:
+        print(f"[sweep] history -> {history.path}", flush=True)
     if store is not None:
         print(f"[sweep] store {store.root}: {store.completed()} cells "
               f"on disk", flush=True)

@@ -12,6 +12,13 @@ Four legs (see docs/ARCHITECTURE.md "Observability layer"):
               annotations around actor/critic/env/train
   log       — JSONL run logs (manifest with config signature + git rev,
               per-episode telemetry snapshots, bench rows), NaN-safe
+  history   — append-only cross-run record store (``results/history/``),
+              manifest-stamped for apples-to-apples comparison
+  regress   — noise-aware (median/MAD) perf-regression verdicts over
+              the history store, the CI sentinel's engine
+  cost      — static FLOPs/bytes/arithmetic-intensity attribution for
+              the hot compiled programs (driver step, sweep pack,
+              serve decode)
 """
 from repro.obs.telemetry import (
     Histogram,
@@ -29,6 +36,13 @@ from repro.obs.telemetry import (
 from repro.obs.compile import CompileTracker
 from repro.obs.profile import PHASES, phase, span, trace_capture
 from repro.obs.log import RunLog, json_safe, read_events, run_manifest
+from repro.obs.history import (HistoryStore, default_store,
+                               history_manifest)
+from repro.obs.regress import (check_history, metric_direction,
+                               regression_verdict, summarize_verdicts)
+from repro.obs.cost import (HOT_PROGRAMS, driver_step_cost,
+                            hot_program_costs, pack_program_cost,
+                            program_cost, serve_decode_cost)
 
 __all__ = [
     "Histogram", "Telemetry",
@@ -38,4 +52,9 @@ __all__ = [
     "CompileTracker",
     "PHASES", "phase", "span", "trace_capture",
     "RunLog", "json_safe", "read_events", "run_manifest",
+    "HistoryStore", "default_store", "history_manifest",
+    "check_history", "metric_direction", "regression_verdict",
+    "summarize_verdicts",
+    "HOT_PROGRAMS", "program_cost", "driver_step_cost",
+    "pack_program_cost", "serve_decode_cost", "hot_program_costs",
 ]

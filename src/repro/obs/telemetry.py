@@ -274,6 +274,11 @@ def telemetry_summary(host: dict) -> dict:
     (p50_latency = 0.5 means tasks typically finish at half the
     deadline). ``*_share`` entries decompose Σ(t_com + t_wait + t_cmp);
     ``exit_share``/``server_share`` are decision distributions.
+
+    The zero-requests case is strict-JSON safe without scrubbing: empty
+    histograms report ``None`` quantiles (never NaN), and every ratio's
+    denominator is floored, so an idle engine/driver snapshot carries
+    zero rates rather than div-by-zero artifacts.
     """
     c, hists = host["counters"], host["hists"]
     tasks = max(c["tasks"], 1.0)
@@ -282,7 +287,8 @@ def telemetry_summary(host: dict) -> dict:
 
     def q(name, p):
         h = hists[name]
-        return hist_quantile(h["edges"], h["counts"], p)
+        v = hist_quantile(h["edges"], h["counts"], p)
+        return v if np.isfinite(v) else None
 
     def share(name):
         counts = np.asarray(hists[name]["counts"][1:-1], np.float64)

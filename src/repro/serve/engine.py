@@ -19,6 +19,7 @@ slots carry a request each slot.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Optional
@@ -63,7 +64,8 @@ class EdgeServingEngine:
                  workload: Optional[str] = None,
                  arrival_rate: Optional[float] = None,
                  scenario: Optional[str] = None,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 latency_ring: int = 512):
         """``scenario`` names a ``repro.mec.SCENARIOS`` entry whose dynamic
         knobs (capacity range, jitter, CSI error, workload process, ...)
         overlay the engine's MEC world model — exit tables and shape stay
@@ -74,7 +76,9 @@ class EdgeServingEngine:
         ``arrival_rate=0.7``. ``use_pallas`` is the scheduler's kernel
         backend switch (None auto-selects: Pallas on TPU, jnp reference
         elsewhere) — the same batched actor program the rollout and sweep
-        layers run."""
+        layers run. ``latency_ring`` bounds the exact last-K request
+        latency window ``telemetry_snapshot`` derives its
+        ``latency_p50_s_exact``/``latency_p99_s_exact`` from."""
         key = key if key is not None else jax.random.PRNGKey(seed)
         self.cfg = cfg
         self.model = model_for(cfg)
@@ -145,6 +149,12 @@ class EdgeServingEngine:
         # device-resident request telemetry ([M]-batched updates, pulled
         # to host only by telemetry_snapshot) + host transfer counters
         self.telemetry = rollout_telemetry(self.env.N, self.env.L)
+        # exact last-K request latencies (seconds, finished requests
+        # only) next to the bucketed histogram: the histogram's p99 is a
+        # bin-edge interpolation, the ring's is the true order statistic
+        # over the recent window
+        self._latency_ring: collections.deque = collections.deque(
+            maxlen=latency_ring)
         self.transfers = {"decode_h2d": 0, "decode_d2h": 0,
                           "telemetry_pulls": 0}
         self._tel_update = jax.jit(
@@ -247,25 +257,51 @@ class EdgeServingEngine:
                     f"{jnp.shape(a)}")
         self.agent_state = state
 
-    def telemetry_snapshot(self) -> dict:
+    def telemetry_snapshot(self, *, history=None,
+                           name: str = "serve") -> dict:
         """Host view of the request telemetry (one device->host pull).
 
         ``summary`` carries the derived headline numbers
         (``deadline_hit_rate``, ``latency_p50``/``latency_p99`` in
         deadline units plus ``latency_p50_s``/``latency_p99_s`` converted
         with the engine's configured deadline, decision shares, reward
-        decomposition); ``transfers`` counts the engine's host<->device
-        round-trips (decode uploads/downloads, telemetry pulls).
+        decomposition). ``latency_p50_s_exact``/``latency_p99_s_exact``
+        are true order statistics over the exact last-K latency ring —
+        the histogram estimates' ground truth. Before any request is
+        served every quantile is ``None`` and every rate 0 (never NaN —
+        the snapshot is strict-JSON as is). ``transfers`` counts the
+        engine's host<->device round-trips. ``history`` (a
+        ``repro.obs.HistoryStore``) appends the summary as one
+        manifest-stamped ``serve`` record under ``name``.
         """
         host = telemetry_host(self.telemetry)
         summary = telemetry_summary(host)
         dl = float(self.env.cfg.deadline_s)
         lat = host["hists"]["latency"]
-        for q, name in ((0.5, "latency_p50_s"), (0.99, "latency_p99_s")):
-            summary[name] = hist_quantile(lat["edges"], lat["counts"], q) * dl
+        for q, key in ((0.5, "latency_p50_s"), (0.99, "latency_p99_s")):
+            v = hist_quantile(lat["edges"], lat["counts"], q)
+            summary[key] = float(v) * dl if np.isfinite(v) else None
+        ring = np.asarray(self._latency_ring, np.float64)
+        summary["latency_ring_n"] = int(ring.size)
+        for q, key in ((50, "latency_p50_s_exact"),
+                       (99, "latency_p99_s_exact")):
+            summary[key] = (float(np.percentile(ring, q)) if ring.size
+                            else None)
         host["summary"] = summary
         self.transfers["telemetry_pulls"] += 1
         host["transfers"] = dict(self.transfers)
+        if history is not None:
+            from repro.obs.history import history_manifest
+            metrics = {k: v for k, v in summary.items()
+                       if isinstance(v, (int, float))
+                       and not isinstance(v, bool)}
+            history.append(
+                "serve", name, metrics,
+                manifest=history_manifest(
+                    config_signature=self.env.cfg.static_signature(),
+                    use_pallas=(self.agent_def.use_pallas
+                                if self.agent_def is not None else None)),
+                transfers=dict(self.transfers))
         return host
 
     def make_request(self, prompt_len: int = 8, max_new: int = 8) -> Request:
@@ -318,6 +354,13 @@ class EdgeServingEngine:
         self.mec_state, result = self.env.step(self.mec_state, tasks, decision,
                                                self._sp)
         self.metrics.update(result, tasks.active)
+        # exact per-request latencies for the last-K ring (finished
+        # requests only; inf = unreachable link is a miss, not a time).
+        # serve_slot already syncs result.reward/decision to host each
+        # slot, so this adds no new device round-trip pattern.
+        tt = np.asarray(result.t_total, np.float64)
+        act_mask = np.asarray(tasks.active, np.float64) > 0.5
+        self._latency_ring.extend(tt[act_mask & np.isfinite(tt)].tolist())
         deadline = (self._sp.deadline_s if self._sp is not None
                     else self.env.params.deadline_s)
         self.telemetry = self._tel_update(self.telemetry, decision, result,

@@ -186,7 +186,7 @@ def run_cell(cell: Cell, *, use_pallas: Optional[bool] = None,
 def run_sweep(spec: SweepSpec, *, store: Optional[SweepStore] = None,
               mesh=None, packed: bool = True, log=print,
               use_pallas: Optional[bool] = None,
-              telemetry: bool = False) -> list:
+              telemetry: bool = False, history=None) -> list:
     """Run the whole grid; returns rows in ``spec.expand()`` order.
 
     With a store, finished cells are loaded instead of recomputed and
@@ -194,6 +194,12 @@ def run_sweep(spec: SweepSpec, *, store: Optional[SweepStore] = None,
     any member cell is missing (pack composition depends only on the
     grid, so a resumed sweep recomputes missing cells inside the exact
     same vmapped batch it would have run the first time).
+
+    ``history`` (a ``repro.obs.HistoryStore``) appends one
+    manifest-stamped ``sweep`` record per *executed* cell — cached rows
+    were recorded by the run that produced them. The record carries the
+    cell's scalar metrics plus (with ``telemetry=True``) the telemetry
+    summary's scalar headline numbers.
     """
     cells = spec.expand()
     packs = pack_cells(cells)
@@ -228,4 +234,29 @@ def run_sweep(spec: SweepSpec, *, store: Optional[SweepStore] = None,
             results[c] = row
             if store is not None:
                 store.save(c, row)
+            if history is not None:
+                _append_history(history, c, row, use_pallas=use_pallas)
     return [results[c] for c in cells]
+
+
+def _append_history(history, cell: Cell, row: dict, *,
+                    use_pallas: Optional[bool] = None) -> dict:
+    """One ``sweep`` history record for an executed cell's row."""
+    from repro.obs.history import history_manifest
+
+    metrics = {k: v for k, v in row.items()
+               if k != "seed"  # label (already in the record name)
+               and isinstance(v, (int, float)) and not isinstance(v, bool)
+               and np.isfinite(v)}
+    tel = row.get("telemetry") or {}
+    for k, v in (tel.get("summary") or {}).items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                and np.isfinite(v):
+            metrics[f"tel_{k}"] = v
+    cfg = make_scenario(cell.scenario, n_devices=cell.n_devices,
+                        slot_ms=cell.slot_ms, **dict(cell.overrides))
+    return history.append(
+        "sweep", f"{cell.scenario}/{cell.method}/s{cell.seed}", metrics,
+        manifest=history_manifest(config_signature=cfg.static_signature(),
+                                  use_pallas=use_pallas),
+        cell=cell.cell_hash, n_slots=cell.n_slots)

@@ -1,0 +1,288 @@
+"""Run-history observability: store round-trips, noise-aware regression
+verdicts, trend rendering, histogram-quantile edge cases and static cost
+attribution of the hot compiled programs."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    HistoryStore,
+    check_history,
+    hist_quantile,
+    history_manifest,
+    metric_direction,
+    regression_verdict,
+    summarize_verdicts,
+)
+from repro.obs.history import comparable, default_store, history_root
+from repro.obs.regress import (IMPROVEMENT, INSUFFICIENT, OK, REGRESSION)
+
+
+def manifest(rev="r0", backend="cpu", n_devices=1, use_pallas=False):
+    return {"git_rev": rev, "backend": backend, "n_devices": n_devices,
+            "use_pallas": use_pallas}
+
+
+# ------------------------------------------------------------------- store
+class TestHistoryStore:
+    def test_append_reload_round_trip(self, tmp_path):
+        store = HistoryStore(str(tmp_path / "hist"))
+        rec = store.append("bench", "kernels/gcn", {"us_per_call": 12.5},
+                           manifest=manifest("abc123"), derived="b64")
+        assert rec["schema"] == 1 and rec["kind"] == "bench"
+        store.append("sweep", "fig5/grle/s0", {"ssp": 0.91},
+                     manifest=manifest("abc123"))
+
+        reloaded = HistoryStore(str(tmp_path / "hist"))
+        recs = reloaded.records()
+        assert [r["name"] for r in recs] == ["kernels/gcn", "fig5/grle/s0"]
+        assert recs[0]["metrics"] == {"us_per_call": 12.5}
+        assert recs[0]["derived"] == "b64"
+        assert recs[0]["manifest"]["git_rev"] == "abc123"
+        # file is strict JSONL: one parseable object per line
+        lines = (tmp_path / "hist" / "records.jsonl").read_text().splitlines()
+        assert len(lines) == 2
+        for line in lines:
+            json.loads(line)
+
+    def test_filters_and_series(self, tmp_path):
+        store = HistoryStore(str(tmp_path))
+        for i, backend in enumerate(["cpu", "cpu", "tpu"]):
+            store.append("bench", "k", {"wall_s": float(i)},
+                         manifest=manifest(f"r{i}", backend=backend))
+        assert len(store.records(backend="cpu")) == 2
+        assert len(store.records(git_rev="r2")) == 1
+        assert store.names(kind="bench") == ["k"]
+        assert store.latest("k")["metrics"]["wall_s"] == 2.0
+        like = store.records(backend="cpu")[0]
+        assert [v for _, v in store.series("k", "wall_s", like=like)] \
+            == [0.0, 1.0]
+
+    def test_rejects_bad_kind_and_nan(self, tmp_path):
+        store = HistoryStore(str(tmp_path))
+        with pytest.raises(ValueError):
+            store.append("bogus", "x", {})
+        with pytest.raises(ValueError):
+            store.append("bench", "", {})
+        # NaN metrics are nulled by json_safe, never serialized as NaN
+        store.append("bench", "x", {"wall_s": float("nan")},
+                     manifest=manifest())
+        assert store.latest("x")["metrics"]["wall_s"] is None
+
+    def test_comparable_keys(self):
+        a = {"manifest": manifest()}
+        assert comparable(a, {"manifest": manifest()})
+        assert not comparable(a, {"manifest": manifest(backend="tpu")})
+        assert not comparable(a, {"manifest": manifest(n_devices=8)})
+        assert not comparable(a, {"manifest": manifest(use_pallas=True)})
+        # the rev may differ — that's the whole point of a trend
+        assert comparable(a, {"manifest": manifest(rev="other")})
+
+    def test_default_store_env(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_HISTORY", str(tmp_path / "h"))
+        assert history_root() == str(tmp_path / "h")
+        assert default_store().root == str(tmp_path / "h")
+        monkeypatch.setenv("REPRO_HISTORY", "")
+        assert history_root() is None
+        assert default_store() is None
+
+    def test_history_manifest_stamps(self):
+        man = history_manifest(config_signature=("sig",), use_pallas=True)
+        assert man["backend"] and man["git_rev"]
+        assert isinstance(man["n_devices"], int) and man["n_devices"] >= 1
+        assert man["use_pallas"] is True
+
+
+# ---------------------------------------------------------------- verdicts
+class TestRegressionVerdicts:
+    def test_stable_noise_is_ok(self):
+        rng = np.random.default_rng(0)
+        base = (100 * (1 + 0.02 * rng.standard_normal(8))).tolist()
+        v = regression_verdict(base, 101.0, direction=1)
+        assert v["status"] == OK
+        assert v["n_history"] == 8 and np.isfinite(v["band"])
+
+    def test_thirty_percent_slowdown_flags(self):
+        # lower-is-better metric (us_per_call): +30% must regress
+        rng = np.random.default_rng(1)
+        base = (50 * (1 + 0.02 * rng.standard_normal(8))).tolist()
+        v = regression_verdict(base, 65.0, direction=-1)
+        assert v["status"] == REGRESSION
+        assert v["ratio"] == pytest.approx(65.0 / v["median"], rel=1e-6)
+        # and a higher-is-better metric dropping 30% likewise
+        v2 = regression_verdict(base, 35.0, direction=1)
+        assert v2["status"] == REGRESSION
+
+    def test_improvement_and_insufficient(self):
+        v = regression_verdict([100.0] * 8, 140.0, direction=1)
+        assert v["status"] == IMPROVEMENT
+        v = regression_verdict([100.0, 101.0], 999.0, direction=1)
+        assert v["status"] == INSUFFICIENT and v["median"] is None
+
+    def test_mad_widens_band_for_noisy_series(self):
+        # 30% swings are normal for this series: 1.25x must NOT regress
+        base = [100, 140, 80, 125, 75, 130, 90, 120]
+        v = regression_verdict(base, 78.0, direction=1, tolerance=0.10)
+        assert v["status"] == OK
+        assert v["band"] > 0.10 * abs(v["median"])
+
+    def test_direction_inference(self):
+        assert metric_direction("steps_per_s") == 1
+        assert metric_direction("us_per_call") == -1
+        assert metric_direction("latency_p99_s_exact") == -1
+        assert metric_direction("avg_reward_per_task") == 0  # not gated
+
+
+class TestCheckHistory:
+    def fill(self, store, values, *, metric="us_per_call", name="k",
+             backend="cpu"):
+        for i, v in enumerate(values):
+            store.append("bench", name, {metric: float(v)},
+                         manifest=manifest(f"r{i}", backend=backend))
+
+    def test_no_change_pair_is_green(self, tmp_path):
+        store = HistoryStore(str(tmp_path))
+        self.fill(store, [50.0, 50.5, 49.5, 50.2])
+        verdicts = check_history(store)
+        assert [v["status"] for v in verdicts] == [OK]
+        counts = summarize_verdicts(verdicts)
+        assert counts[OK] == 1 and counts[REGRESSION] == 0
+
+    def test_injected_slowdown_flags(self, tmp_path):
+        store = HistoryStore(str(tmp_path))
+        self.fill(store, [50.0, 50.5, 49.5, 65.0])  # +30% on the last run
+        (v,) = check_history(store)
+        assert v["status"] == REGRESSION
+        assert v["name"] == "k" and v["metric"] == "us_per_call"
+        assert v["git_rev"] == "r3"
+
+    def test_incomparable_records_do_not_gate(self, tmp_path):
+        store = HistoryStore(str(tmp_path))
+        self.fill(store, [50.0, 50.0, 50.0], backend="tpu")
+        # latest is cpu: the tpu numbers are not its baseline
+        self.fill(store, [999.0], backend="cpu")
+        (v,) = check_history(store)
+        assert v["status"] == INSUFFICIENT and v["n_history"] == 0
+
+    def test_per_metric_tolerance_override(self, tmp_path):
+        store = HistoryStore(str(tmp_path))
+        self.fill(store, [50.0, 50.0, 50.0, 57.0])  # +14%
+        (tight,) = check_history(store)
+        assert tight["status"] == REGRESSION
+        (loose,) = check_history(store, tolerances={"us_per_call": 0.25})
+        assert loose["status"] == OK
+
+    def test_unknown_metrics_skipped(self, tmp_path):
+        store = HistoryStore(str(tmp_path))
+        for i in range(4):
+            store.append("bench", "k", {"mystery_number": 1.0 + i},
+                         manifest=manifest(f"r{i}"))
+        assert check_history(store) == []
+
+
+# ----------------------------------------------------------- trend report
+class TestTrendReport:
+    def test_renders_markdown_with_verdicts(self, tmp_path):
+        from repro.launch.history import trend_report
+
+        store = HistoryStore(str(tmp_path))
+        for i, us in enumerate([50.0, 50.5, 49.5, 65.0]):
+            store.append("bench", "kernels/gcn", {"us_per_call": us},
+                         manifest=manifest(f"rev{i}00000"))
+        text, verdicts = trend_report(store)
+        assert "## `kernels/gcn`" in text
+        assert "rev00000" in text and "rev300000" not in text  # 8-char revs
+        assert "`us_per_call`" in text
+        assert "regression" in text
+        assert summarize_verdicts(verdicts)[REGRESSION] == 1
+
+    def test_empty_store(self, tmp_path):
+        from repro.launch.history import trend_report
+
+        text, verdicts = trend_report(HistoryStore(str(tmp_path)))
+        assert "no matching history records" in text
+        assert verdicts == []
+
+    def test_cli_writes_report(self, tmp_path):
+        from repro.launch.history import main
+
+        store = HistoryStore(str(tmp_path / "h"))
+        for i in range(4):
+            store.append("bench", "k", {"wall_s": 1.0},
+                         manifest=manifest(f"r{i}"))
+        out = tmp_path / "report.md"
+        counts = main(["--root", str(tmp_path / "h"), "--out", str(out)])
+        assert out.exists() and "## `k`" in out.read_text()
+        assert counts[OK] == 1
+
+
+# ------------------------------------------------------- quantile edge cases
+class TestHistQuantileEdges:
+    def setup_method(self):
+        self.edges = np.linspace(0.0, 1.0, 9)
+
+    def test_empty_histogram_is_nan(self):
+        counts = np.zeros(10)  # 8 bins + under/overflow
+        assert np.isnan(hist_quantile(self.edges, counts, 0.5))
+
+    def test_all_underflow_clamps_to_first_edge(self):
+        counts = np.zeros(10)
+        counts[0] = 7  # all mass below edges[0]
+        assert hist_quantile(self.edges, counts, 0.5) == self.edges[0]
+
+    def test_all_overflow_clamps_to_last_edge(self):
+        counts = np.zeros(10)
+        counts[-1] = 7  # all mass above edges[-1]
+        assert hist_quantile(self.edges, counts, 0.5) == self.edges[-1]
+
+
+# ---------------------------------------------------------- cost attribution
+class TestCostAttribution:
+    def test_driver_step_cost_nonzero_flops(self):
+        from repro.obs import driver_step_cost
+
+        cost = driver_step_cost(n_devices=4, n_fleets=1)
+        # XLA's CPU cost model must see real work in the slot body
+        assert cost["flops"] is not None and cost["flops"] > 0
+        assert cost["bytes_accessed"] is None or cost["bytes_accessed"] > 0
+        assert "slot body" in cost["derived"]
+        json.dumps(cost, allow_nan=False)
+
+    def test_program_cost_plain_callable(self):
+        import jax.numpy as jnp
+
+        from repro.obs import program_cost
+
+        cost = program_cost(lambda x: (x @ x.T).sum(),
+                            jnp.ones((32, 32), jnp.float32))
+        assert cost["flops"] is not None and cost["flops"] > 0
+        assert cost["argument_bytes"] == 32 * 32 * 4
+
+
+# -------------------------------------------------------------- bench runner
+class TestBenchRunner:
+    def test_unknown_only_module_errors(self, capsys):
+        from benchmarks.run import main
+
+        with pytest.raises(SystemExit) as ei:
+            main(["--only", "bogus_module"])
+        assert ei.value.code == 2
+        assert "unknown benchmark module" in capsys.readouterr().err
+
+    def test_save_rows_records_history(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_HISTORY", str(tmp_path / "hist"))
+        monkeypatch.setattr("benchmarks.common.RESULTS_DIR",
+                            str(tmp_path / "results"))
+        from benchmarks.common import save_rows
+
+        rows = [{"name": "unit/row", "us_per_call": 3.5, "derived": "t"}]
+        save_rows("unit", rows)
+        # rows are stamped with provenance...
+        assert rows[0]["backend"] and rows[0]["git_rev"]
+        assert isinstance(rows[0]["n_jax_devices"], int)
+        # ...and one manifest-stamped history record appended
+        (rec,) = HistoryStore(str(tmp_path / "hist")).records()
+        assert rec["kind"] == "bench" and rec["name"] == "unit/row"
+        assert rec["metrics"] == {"us_per_call": 3.5}
+        assert rec["manifest"]["backend"] == rows[0]["backend"]

@@ -308,6 +308,25 @@ class TestEngineTelemetry:
         assert [len(o) for o in outs] == [3, 2]
         assert all(isinstance(t, int) for o in outs for t in o)
 
+    def test_zero_request_snapshot_is_strict_json(self):
+        # a freshly constructed engine has served nothing: every quantile
+        # must be None (not NaN) and every rate 0 — no div-by-zero
+        from repro.configs import get_arch
+        from repro.serve.engine import EdgeServingEngine, Replica
+
+        cfg = get_arch("qwen1_5_0_5b", reduced=True)
+        fresh = EdgeServingEngine(cfg, [Replica("a")], batch_slots=2)
+        snap = fresh.telemetry_snapshot()
+        s = snap["summary"]
+        json.dumps(json_safe(snap), allow_nan=False)
+        assert s["tasks"] == 0
+        assert s["deadline_hit_rate"] == 0.0
+        assert s["latency_ring_n"] == 0
+        for key in ("latency_p50", "latency_p99", "latency_p50_s",
+                    "latency_p99_s", "latency_p50_s_exact",
+                    "latency_p99_s_exact"):
+            assert s[key] is None, (key, s[key])
+
     def test_snapshot_summary(self, engine):
         for _ in range(5):
             engine.serve_slot()
@@ -319,3 +338,9 @@ class TestEngineTelemetry:
         assert s["latency_p50_s"] == pytest.approx(s["latency_p50"] * dl)
         assert snap["transfers"]["telemetry_pulls"] == 1
         json.dumps(json_safe(snap), allow_nan=False)
+        # the exact latency ring saw the same served requests: true order
+        # statistics alongside the histogram estimates
+        assert s["latency_ring_n"] > 0
+        assert np.isfinite(s["latency_p50_s_exact"])
+        assert np.isfinite(s["latency_p99_s_exact"])
+        assert s["latency_p50_s_exact"] <= s["latency_p99_s_exact"]

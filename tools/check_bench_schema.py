@@ -1,15 +1,24 @@
-"""Validate the committed BENCH_*.json benchmark records.
+"""Validate the committed BENCH_*.json benchmark records + run history.
 
     python tools/check_bench_schema.py [files...]
 
-With no arguments checks every BENCH_*.json at the repo root. Each file
-must be a non-empty JSON array of row objects; every row needs a unique
-non-empty ``name`` and a ``derived`` provenance string, plus at least one
-measurement key appropriate to its row family:
+With no arguments checks every BENCH_*.json at the repo root plus, when
+present, every ``results/history/*.jsonl`` run-history file. Passing
+paths checks exactly those (``.jsonl`` -> history schema, anything else
+-> BENCH row schema). Each BENCH file must be a non-empty JSON array of
+row objects; every row needs a unique non-empty ``name`` and a
+``derived`` provenance string, plus at least one measurement key
+appropriate to its row family:
 
   throughput rows — one of ``steps_per_s`` / ``cells_per_s`` /
-                    ``us_per_call`` / ``wall_s`` (finite, positive)
+                    ``us_per_call`` / ``wall_s`` / ``flops``
+                    (finite, positive)
   guard rows (``*_guard``) — ``packs`` and ``cells`` (positive ints)
+
+History files are JSONL, one record per line: ``schema`` (int), ``kind``
+in bench/sweep/serve, a non-empty ``name``, a ``metrics`` object with at
+least one finite number, and a ``manifest`` carrying the comparability
+stamps (``git_rev``, ``backend``, ``n_devices``).
 
 Strict JSON is enforced (a bare ``NaN``/``Infinity`` token fails), so a
 benchmark writer that serializes a non-finite measurement breaks CI here
@@ -24,7 +33,16 @@ import os
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-MEASUREMENT_KEYS = ("steps_per_s", "cells_per_s", "us_per_call", "wall_s")
+MEASUREMENT_KEYS = ("steps_per_s", "cells_per_s", "us_per_call", "wall_s",
+                    "flops")
+HISTORY_KINDS = ("bench", "sweep", "serve")
+MANIFEST_KEYS = ("git_rev", "backend", "n_devices")
+
+
+def _strict_load(text: str):
+    # strict JSON: a serialized NaN/Infinity is a schema error
+    return json.loads(text, parse_constant=lambda c: (_ for _ in ()).throw(
+        ValueError(f"non-finite literal {c}")))
 
 
 def check_rows(path: str, rows) -> list:
@@ -73,19 +91,67 @@ def check_rows(path: str, rows) -> list:
     return errors
 
 
+def check_history_lines(path: str, lines) -> list:
+    """Schema errors for one run-history JSONL file's lines."""
+    errors = []
+
+    def err(msg, i):
+        errors.append(f"{os.path.basename(path)}:{i + 1}: {msg}")
+
+    n_records = 0
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = _strict_load(line)
+        except ValueError as e:
+            err(f"unreadable JSON ({e})", i)
+            continue
+        n_records += 1
+        if not isinstance(rec, dict):
+            err("record is not an object", i)
+            continue
+        if not isinstance(rec.get("schema"), int):
+            err("missing/non-int 'schema'", i)
+        if rec.get("kind") not in HISTORY_KINDS:
+            err(f"'kind' must be one of {HISTORY_KINDS}, "
+                f"got {rec.get('kind')!r}", i)
+        if not isinstance(rec.get("name"), str) or not rec.get("name"):
+            err("missing/empty 'name'", i)
+        metrics = rec.get("metrics")
+        if not isinstance(metrics, dict) or not any(
+                isinstance(v, (int, float)) and not isinstance(v, bool)
+                and math.isfinite(v) for v in metrics.values()):
+            err(f"{rec.get('name')}: 'metrics' needs at least one finite "
+                f"number", i)
+        manifest = rec.get("manifest")
+        if not isinstance(manifest, dict):
+            err(f"{rec.get('name')}: missing 'manifest' object", i)
+        else:
+            for key in MANIFEST_KEYS:
+                if manifest.get(key) in (None, ""):
+                    err(f"{rec.get('name')}: manifest missing {key!r}", i)
+    if not n_records:
+        errors.append(f"{os.path.basename(path)}: no history records")
+    return errors
+
+
 def check_file(path: str) -> list:
     try:
         with open(path) as f:
-            # strict JSON: a serialized NaN/Infinity is a schema error
-            rows = json.load(f, parse_constant=lambda c: (_ for _ in ()).
-                             throw(ValueError(f"non-finite literal {c}")))
+            if path.endswith(".jsonl"):
+                return check_history_lines(path, f.readlines())
+            rows = _strict_load(f.read())
     except (OSError, ValueError) as e:
         return [f"{os.path.basename(path)}: unreadable JSON ({e})"]
     return check_rows(path, rows)
 
 
 def main(argv) -> int:
-    paths = argv or sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    paths = argv or sorted(
+        glob.glob(os.path.join(ROOT, "BENCH_*.json"))
+        + glob.glob(os.path.join(ROOT, "results", "history", "*.jsonl")))
     if not paths:
         print("check_bench_schema: no BENCH_*.json files found")
         return 1

@@ -1,0 +1,104 @@
+"""Noise-aware perf-regression gate over the run-history store.
+
+    python tools/check_perf_regression.py [--root results/history]
+        [--mode warn|fail] [--k 8] [--tolerance 0.10]
+        [--metric-tolerance us_per_call=0.25 ...] [--kind bench]
+
+For every record name in the history store the latest record is
+compared against the median of the last K comparable earlier records
+(same backend / jax device count / ``use_pallas``), with the tolerance
+band widened by 3 robust sigmas of the observed run-to-run noise
+(median absolute deviation) — see ``repro.obs.regress``. Series shorter
+than the minimum history print the explicit ``insufficient-history``
+status and never gate.
+
+``--mode warn`` (the PR setting) prints verdicts and always exits 0;
+``--mode fail`` (main/nightly) exits 1 when any gated metric regressed.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.obs.history import HistoryStore, history_root  # noqa: E402
+from repro.obs.regress import (DEFAULT_K, DEFAULT_TOLERANCE, INSUFFICIENT,
+                               MIN_HISTORY, REGRESSION, check_history,
+                               summarize_verdicts)  # noqa: E402
+
+
+def parse_metric_tolerances(pairs) -> dict:
+    out = {}
+    for pair in pairs or []:
+        key, _, val = pair.partition("=")
+        if not key or not val:
+            raise SystemExit(
+                f"check_perf_regression: bad --metric-tolerance {pair!r} "
+                f"(want METRIC=FRACTION)")
+        out[key] = float(val)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--root", default=None,
+                    help="history store dir (default REPRO_HISTORY or "
+                         "results/history)")
+    ap.add_argument("--mode", choices=("warn", "fail"), default="warn",
+                    help="warn: report only (PRs); fail: exit 1 on any "
+                         "regression (main)")
+    ap.add_argument("--k", type=int, default=DEFAULT_K,
+                    help="baseline window: last K comparable records")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="floor band as a fraction of the median")
+    ap.add_argument("--metric-tolerance", action="append", default=[],
+                    metavar="METRIC=FRACTION",
+                    help="per-metric tolerance override (repeatable)")
+    ap.add_argument("--min-history", type=int, default=MIN_HISTORY)
+    ap.add_argument("--kind", default=None,
+                    choices=(None, "bench", "sweep", "serve"))
+    args = ap.parse_args(argv)
+
+    root = args.root if args.root is not None else (history_root()
+                                                    or "results/history")
+    store = HistoryStore(root)
+    verdicts = check_history(
+        store, k=args.k, tolerance=args.tolerance,
+        tolerances=parse_metric_tolerances(args.metric_tolerance),
+        kind=args.kind, min_history=args.min_history)
+
+    for v in sorted(verdicts, key=lambda v: (v["status"] != REGRESSION,
+                                             v["name"], v["metric"])):
+        if v["status"] == INSUFFICIENT:
+            print(f"check_perf_regression: {v['status']:22s} "
+                  f"{v['name']} :: {v['metric']} "
+                  f"({v['n_history']} comparable baseline records, "
+                  f"need {args.min_history})")
+            continue
+        print(f"check_perf_regression: {v['status']:22s} "
+              f"{v['name']} :: {v['metric']} "
+              f"current={v['current']:.6g} median={v['median']:.6g} "
+              f"band=±{v['band']:.3g} (n={v['n_history']}, "
+              f"backend={v['backend']})")
+
+    counts = summarize_verdicts(verdicts)
+    print(f"check_perf_regression: {counts['total']} gated metrics — "
+          f"{counts['ok']} ok, {counts[REGRESSION]} regressions, "
+          f"{counts['improvement']} improvements, "
+          f"{counts[INSUFFICIENT]} insufficient-history "
+          f"[mode={args.mode}, root={store.path}]")
+    if counts[REGRESSION] and args.mode == "fail":
+        return 1
+    if counts[REGRESSION]:
+        print("check_perf_regression: regressions found but mode=warn — "
+              "not failing (PRs warn; main fails)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
