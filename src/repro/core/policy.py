@@ -230,7 +230,16 @@ class AgentDef:
 
         Safe under ``vmap`` over keys — the sweep runner builds a whole
         pack's per-cell states with ``jax.vmap(def_.init)``.
+
+        The stream is isolated with ``fold_in`` before any split, so a
+        caller that re-splits the *same* key for env/workload sampling
+        (the serve engines do exactly this) never draws streams
+        correlated with the agent's params or its decision RNG — the
+        hygiene the legacy ``OffloadingAgent`` constructor had and the
+        first pure-API cut dropped (ROADMAP item 6;
+        ``tests/test_policy.py::TestRngHygiene`` pins it).
         """
+        key = jax.random.fold_in(key, 0xC0FFEE)
         k_params, k_rng = jax.random.split(key)
         params = init_params(self.actor, self.env, k_params,
                              hidden=self.hidden)

@@ -1,12 +1,13 @@
 """Subcommand dispatch: ``python -m repro.launch <command> [args...]``.
 
 Commands:
-  sweep    sharded (scenario x method x seed) experiment grids
-  serve    GRLE-scheduled early-exit LM serving driver
-  train    LLM training-step driver
-  dryrun   multi-pod compile dry-run
-  profile  instrumented rollout: telemetry + compile/trace capture + JSONL log
-  history  run-history trend tables + noise-aware regression verdicts
+  sweep       sharded (scenario x method x seed) experiment grids
+  serve       GRLE-scheduled early-exit LM serving driver
+  serve-bench serving throughput: sync slot loop vs continuous batching
+  train       LLM training-step driver
+  dryrun      multi-pod compile dry-run
+  profile     instrumented rollout: telemetry + compile/trace + JSONL log
+  history     run-history trend tables + noise-aware regression verdicts
 
 ``python -m repro.launch.serve`` style module paths keep working; this
 entry point just gives the drivers one front door.
@@ -17,7 +18,8 @@ import sys
 
 
 def main() -> None:
-    commands = ("sweep", "serve", "train", "dryrun", "profile", "history")
+    commands = ("sweep", "serve", "serve-bench", "train", "dryrun",
+                "profile", "history")
     if len(sys.argv) < 2 or sys.argv[1] in ("-h", "--help"):
         print(__doc__)
         raise SystemExit(0 if len(sys.argv) >= 2 else 2)
@@ -35,6 +37,10 @@ def main() -> None:
         return
     if cmd == "history":
         from repro.launch.history import main as run
+        run(argv)
+        return
+    if cmd == "serve-bench":
+        from repro.launch.serve_bench import main as run
         run(argv)
         return
     # legacy drivers parse sys.argv directly

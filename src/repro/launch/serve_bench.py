@@ -1,0 +1,28 @@
+"""``python -m repro.launch serve-bench [--quick]`` — serving throughput.
+
+Front door for ``benchmarks/serve_throughput.py``: the synchronous
+``serve_slot`` loop vs the continuous-batching engine on one
+MMPP-generated request trace, writing ``BENCH_serve.json`` + run
+history. The benchmark package lives at the repo root (next to the
+``BENCH_*.json`` files it maintains), so this command must run from a
+repo checkout; the installed ``repro`` package alone cannot carry it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    try:
+        from benchmarks.serve_throughput import main as run
+    except ImportError as e:
+        raise SystemExit(
+            "serve-bench needs the repo's benchmarks/ package on the "
+            "path — run from the repository root, e.g.\n"
+            "  PYTHONPATH=src python -m repro.launch serve-bench --quick\n"
+            f"(import failed: {e})")
+    run(list(argv) if argv is not None else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -250,6 +250,59 @@ def telemetry_update(tel: Telemetry, *, decisions: jax.Array,
     return Telemetry(counters=c, hists=h, loss_ema=ema)
 
 
+# ------------------------------------------------------- serving registry
+# Request-lifecycle counters the continuous-batching serve engine adds on
+# top of the rollout registry. The invariant the serve tests pin:
+# admitted == served + expired + in-flight, exactly.
+SERVE_COUNTERS = (
+    "admitted",        # requests accepted into the serving queue
+    "served",          # requests that completed service
+    "expired",         # requests dropped past-deadline before service
+)
+
+# Geometric queue-depth bucket edges: depth 0, 1, 2, 4, ... 4096. A
+# thousands-deep backlog under an MMPP burst lands in a real bin, not
+# the overflow.
+QUEUE_DEPTH_EDGES = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0,
+                     256.0, 512.0, 1024.0, 2048.0, 4096.0)
+
+
+def serve_telemetry(n_servers: int, n_exits: int) -> Telemetry:
+    """The rollout registry extended with request-lifecycle telemetry.
+
+    Adds the ``SERVE_COUNTERS`` and a ``queue_depth`` histogram
+    (pending-queue depth sampled once per decode step, geometric
+    buckets). ``telemetry_update`` only touches the keys it knows, so
+    the extended registry rides the same shared update — the serve
+    engine folds its extra keys with ``serve_telemetry_update``.
+    """
+    base = rollout_telemetry(n_servers, n_exits)
+    counters = dict(base.counters)
+    counters.update({n: jnp.zeros((), jnp.float32) for n in SERVE_COUNTERS})
+    hists = dict(base.hists)
+    hists["queue_depth"] = hist_init(QUEUE_DEPTH_EDGES)
+    return Telemetry(counters=counters, hists=hists,
+                     loss_ema=base.loss_ema)
+
+
+def serve_telemetry_update(tel: Telemetry, admitted, served, expired,
+                           queue_depth) -> Telemetry:
+    """Fold one decode step's request-lifecycle events into the registry.
+
+    ``admitted``/``served``/``expired`` are this step's event counts
+    (python ints or scalars); ``queue_depth`` is the pending-queue depth
+    after the step's admissions.
+    """
+    c = dict(tel.counters)
+    c["admitted"] = c["admitted"] + jnp.asarray(admitted, jnp.float32)
+    c["served"] = c["served"] + jnp.asarray(served, jnp.float32)
+    c["expired"] = c["expired"] + jnp.asarray(expired, jnp.float32)
+    h = dict(tel.hists)
+    h["queue_depth"] = hist_add(
+        h["queue_depth"], jnp.asarray(queue_depth, jnp.float32).reshape(1))
+    return Telemetry(counters=c, hists=h, loss_ema=tel.loss_ema)
+
+
 # ------------------------------------------------------------- host views
 def telemetry_host(tel: Telemetry, index: Optional[int] = None) -> dict:
     """One device->host transfer of the whole registry, JSON-ready.

@@ -139,6 +139,28 @@ class WorkloadGen:
                               k_jitter=ks[6], k_connect=ks[8])
         return new_state, tasks
 
+    # ---------------------------------------------------------------- trace
+    def arrival_trace(self, state: WorkloadState, key: jax.Array,
+                      n_slots: int, sp: Optional[ScenarioParams] = None):
+        """Roll the arrival process forward -> (state, active [T, M]).
+
+        One ``lax.scan`` over ``n_slots`` slots of the full ``sample``
+        body, keeping only each slot's active mask — the slot-t mask is
+        bit-identical to calling ``sample`` sequentially with
+        ``split(key, n_slots)[t]``. This is the serving load generator's
+        source of arrivals (``serve.loadgen``): thousands of MMPP/Poisson
+        arrival slots fuse into one compiled program instead of a host
+        loop, and the channel/churn state threads through exactly as it
+        would online.
+        """
+        keys = jax.random.split(key, n_slots)
+
+        def body(st, k):
+            st, tasks = self.sample(st, k, sp)
+            return st, tasks.active
+
+        return jax.lax.scan(body, state, keys)
+
 
 def _ar1(key, prev, shape, *, lo, hi, mu, noise_scale, rho):
     """Mean-reverting AR(1) step clipped to [lo, hi] — branch-free.

@@ -1,3 +1,19 @@
-from repro.serve.engine import EdgeServingEngine, Replica, Request
+from repro.serve.clock import VirtualClock, WallClock
+from repro.serve.engine import (AgentPool, BatchState, ContinuousServingEngine,
+                                EdgeServingEngine, Replica, Request,
+                                RunningReq, SchedEvents, batch_init,
+                                batch_occupancy, batch_release, sched_evict,
+                                sched_tick)
+from repro.serve.loadgen import make_trace
+from repro.serve.queue import (QueueEntry, QueueState, ServeRequest,
+                               queue_depth, queue_expire, queue_init,
+                               queue_pop, queue_push, queue_requeue)
 
-__all__ = ["EdgeServingEngine", "Replica", "Request"]
+__all__ = [
+    "AgentPool", "BatchState", "ContinuousServingEngine",
+    "EdgeServingEngine", "QueueEntry", "QueueState", "Replica", "Request",
+    "RunningReq", "SchedEvents", "ServeRequest", "VirtualClock", "WallClock",
+    "batch_init", "batch_occupancy", "batch_release", "make_trace",
+    "queue_depth", "queue_expire", "queue_init", "queue_pop", "queue_push",
+    "queue_requeue", "sched_evict", "sched_tick",
+]

@@ -34,7 +34,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 MEASUREMENT_KEYS = ("steps_per_s", "cells_per_s", "us_per_call", "wall_s",
-                    "flops")
+                    "flops", "requests_per_s")
 HISTORY_KINDS = ("bench", "sweep", "serve")
 MANIFEST_KEYS = ("git_rev", "backend", "n_devices")
 
