@@ -1,0 +1,237 @@
+"""Population training throughput: vmapped generation vs per-member loop.
+
+    PYTHONPATH=src python -m benchmarks.pop_throughput [--quick] [--guard]
+
+Measures one PBT training generation for a P-member GRLE population over
+scenario-space draws, two ways doing identical work (P members x
+``n_slots`` slots x B fleets, per-member hyperparameters threaded in as
+data):
+
+* ``pop_vmapped_p{P}``    — ``PopulationDriver.run_generation``: one
+  compiled ``_begin`` + one scan-fused ``_episode`` vmapped over the
+  member axis;
+* ``pop_sequential_loop`` — the pre-population structure: one member at
+  a time, each slot ``sample_slot -> act -> step`` dispatched from
+  Python with host round-trips (the legacy path ``rollout_throughput``
+  baselines against). Its aggregate member-slots/s is P-independent, so
+  it is measured over a few member-episodes; it also cannot express
+  per-member hyperparameters — each distinct lr/exit mask would be its
+  own agent and its own compiled programs.
+
+The vmapped row carries ``vs_sequential_speedup`` and must aggregate
+>= 5x the sequential member-slots/s on one CPU device (full mode — the
+acceptance bar). ``--guard`` (also part of the full run) retrains fresh
+populations at P=8 and P=64 for two generations under a
+``CompileTracker`` and asserts the whole generation loop — resample,
+begin, episode, curriculum update, PBT surgery — stays exactly one
+compile per program, independent of P. A curriculum-vs-DR comparison
+row (``repro.pop.compare_curriculum_dr``) closes the report with the
+held-out hard-scenario table. Rows land in ``BENCH_pop.json`` (merge
+semantics) and the run-history store.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import merge_bench_rows, timed
+from repro.core.policy import agent_def
+from repro.mec.env import MECEnv
+from repro.mec.scenarios import make_scenario, scenario_space
+from repro.pop import (Curriculum, PopulationDriver, PopulationTrainer,
+                       compare_curriculum_dr, format_comparison,
+                       init_population, sample_hypers)
+
+SPACE = ("fig5_baseline", "fig6_capacity")
+# small-but-real learner shape shared by every path measured here
+AGENT_KW = dict(buffer_size=32, batch_size=8, train_every=5)
+DRIVER_KW = dict(replay_capacity=32, batch_size=8, train_every=5)
+
+
+def _adef(n_devices: int = 8):
+    cfg = make_scenario(SPACE[0], n_devices=n_devices)
+    return agent_def("grle", MECEnv(cfg), **AGENT_KW)
+
+
+def bench_generation(n_members: int, n_slots: int, *, n_fleets: int = 1,
+                     seed: int = 0, seq_members: int = 4):
+    """(vmapped aggregate slots/s, sequential-loop slots/s).
+
+    Sequential is the pre-population structure — one member at a time,
+    each slot ``env.sample_slot -> agent.act -> env.step`` dispatched
+    from Python with host round-trips (the same legacy path
+    ``rollout_throughput`` baselines against). Its aggregate
+    member-slots/s is independent of P (members just queue up), so it is
+    measured over ``seq_members`` episodes; note it also could not
+    express per-member hyperparameters at all — every distinct lr/exit
+    mask would be its own agent (and its own compiled programs), which
+    is exactly what hypers-as-data removes.
+    """
+    from repro.core import make_agent
+
+    adef = _adef()
+    env = adef.env
+    space = scenario_space(*SPACE, n_devices=env.cfg.n_devices)
+    key = jax.random.PRNGKey(seed)
+    pop = init_population(adef, key, n_members,
+                          sample_hypers(jax.random.fold_in(key, 1),
+                                        n_members))
+    sps = space.sample_batch(jax.random.fold_in(key, 2), n_members)
+    drv = PopulationDriver(adef, n_fleets=n_fleets, n_slots=n_slots,
+                           mesh=None, **DRIVER_KW)
+
+    drv.run_generation(pop, key, sps)                        # warm/compile
+    _, wall_vmap = timed(drv.run_generation, pop, key, sps)
+
+    def member_episode(i: int, slots: int):
+        k = jax.random.fold_in(key, i)
+        agent = make_agent("grle", env, k)
+        state = env.reset()
+        for _ in range(slots):
+            k, sk = jax.random.split(k)
+            tasks = env.sample_slot(sk)
+            dec, _ = agent.act(state, tasks)
+            state, _ = env.step(state, tasks, dec)
+        return state
+
+    member_episode(0, 3)                                     # warm/compile
+    _, wall_seq = timed(
+        lambda: [member_episode(i, n_slots) for i in range(seq_members)])
+
+    sps_vmap = n_members * n_slots / wall_vmap
+    sps_seq = seq_members * n_slots / wall_seq
+    return sps_vmap, wall_vmap, sps_seq, wall_seq
+
+
+def compile_guard(sizes=(8, 64), *, generations: int = 2,
+                  n_slots: int = 10) -> dict:
+    """Pin: one generation is a constant set of compiled programs,
+    each compiled exactly once, independent of the population size."""
+    from repro.obs import CompileTracker
+
+    adef = _adef()
+    space = scenario_space(*SPACE, n_devices=adef.env.cfg.n_devices)
+    counts_by_p = {}
+    for p in sizes:
+        tr = PopulationTrainer(
+            adef, Curriculum(space.lo, space.hi, n_regions=4),
+            n_members=p, n_slots=n_slots, mesh=None, **DRIVER_KW)
+        with CompileTracker() as ct:
+            tr.train(tr.init_state(), generations)
+            for name, fn in tr.tracked_programs().items():
+                ct.track(name, fn)
+            counts_by_p[p] = ct.assert_counts(
+                {name: 1 for name in tr.tracked_programs()})
+    first = counts_by_p[sizes[0]]
+    for p, counts in counts_by_p.items():
+        assert counts == first, (
+            f"compiled-program set varies with P: P={sizes[0]} -> {first}, "
+            f"P={p} -> {counts}")
+        print(f"  guard P={p:<3d} {generations} generations: "
+              f"{len(counts)} programs, 1 compile each", flush=True)
+    return {"programs": len(first), "members_checked": sum(sizes)}
+
+
+def run(quick: bool = False):
+    n_members = 16 if quick else 64
+    n_slots = 20 if quick else 40
+    seq_members = 2 if quick else 4
+    n_fleets = 1
+
+    sps_vmap, wall_vmap, sps_seq, wall_seq = bench_generation(
+        n_members, n_slots, n_fleets=n_fleets, seq_members=seq_members)
+    speedup = sps_vmap / sps_seq
+    print(f"  vmapped    P={n_members:<3d} {n_members * n_slots} "
+          f"member-slots  {wall_vmap:6.2f}s  {sps_vmap:8.1f} slots/s",
+          flush=True)
+    print(f"  sequential {seq_members} member-episodes x {n_slots} slots  "
+          f"{wall_seq:6.2f}s  {sps_seq:8.1f} slots/s  "
+          f"(vmapped x{speedup:.2f})", flush=True)
+
+    print("  compile guard:", flush=True)
+    guard = compile_guard((8, 16) if quick else (8, 64))
+
+    # full mode matches examples/pop_curriculum.py's defaults (the
+    # scarce-budget regime where the training mix matters most)
+    cmp_kw = (dict(n_members=4, n_fleets=1, n_slots=20, generations=3,
+                   n_regions=4, eval_points=(0.9, 1.0)) if quick else
+              dict(n_members=16, n_fleets=1, n_slots=20, generations=6,
+                   n_regions=6, eval_points=(0.9, 1.0)))
+    adef = _adef()
+    space = scenario_space(*SPACE, n_devices=adef.env.cfg.n_devices)
+    cmp_res, wall_cmp = timed(
+        lambda: compare_curriculum_dr(adef, space, **cmp_kw, **DRIVER_KW))
+    print("  " + format_comparison(cmp_res).replace("\n", "\n  "),
+          flush=True)
+
+    rows = [
+        {
+            "name": f"pop_vmapped_p{n_members}",
+            "derived": (f"PopulationDriver.run_generation: {n_members} "
+                        f"GRLE members x {n_slots} slots x {n_fleets} "
+                        "fleet, per-member hypers as data, one vmapped "
+                        "begin+episode program pair"),
+            "wall_s": round(wall_vmap, 3),
+            "slots_per_s": round(sps_vmap, 1),
+            "n_members": n_members,
+            "n_slots": n_slots,
+            "vs_sequential_speedup": round(speedup, 2),
+        },
+        {
+            "name": "pop_sequential_loop",
+            "derived": ("pre-population baseline: one member at a time, "
+                        "sample_slot -> act -> step dispatched per slot "
+                        "from Python with host round-trips; rate is "
+                        f"P-independent, measured over {seq_members} "
+                        f"member-episodes x {n_slots} slots"),
+            "wall_s": round(wall_seq, 3),
+            "slots_per_s": round(sps_seq, 1),
+            "n_members": seq_members,
+            "n_slots": n_slots,
+        },
+        {
+            "name": "pop_compile_guard",
+            "derived": ("PopulationTrainer full generation loop at P=8 "
+                        "and P=64 (quick: 16): resample/begin/episode/"
+                        "cur_update/pbt each compile exactly once, "
+                        "constant across P"),
+            "packs": guard["programs"],
+            "cells": guard["members_checked"],
+        },
+        {
+            "name": f"pop_curriculum_vs_dr_m{cmp_kw['n_members']}"
+                    f"g{cmp_kw['generations']}",
+            "derived": ("compare_curriculum_dr: auto-curriculum vs "
+                        "uniform-DR control, paired seeds/keys, held-out "
+                        f"hard points t={cmp_kw['eval_points']}"),
+            "wall_s": round(wall_cmp, 3),
+            "curriculum_eval_mean":
+                round(cmp_res["arms"]["curriculum"]["eval_mean"], 4),
+            "dr_eval_mean": round(cmp_res["arms"]["dr"]["eval_mean"], 4),
+            "margin": round(cmp_res["margin"], 4),
+            "curriculum_wins": cmp_res["curriculum_wins"],
+        },
+    ]
+    merge_bench_rows("BENCH_pop.json", rows)
+    if not quick:
+        assert speedup >= 5.0, (
+            f"vmapped generation must aggregate >= 5x the sequential "
+            f"per-member loop, got x{speedup:.2f}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--guard", action="store_true",
+                    help="compile guard only (skip throughput timing)")
+    args = ap.parse_args(argv)
+    if args.guard:
+        compile_guard((8, 16) if args.quick else (8, 64))
+        return
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@
 | roofline            | deliverable (g), from the dry-run  |
 | rollout_throughput  | scan-fused vs per-slot loop        |
 | sweep_throughput    | packed sweep vs per-cell loop      |
+| pop_throughput      | vmapped population vs member loop  |
 | cost_attribution    | FLOPs/bytes of the hot programs    |
 
 Every saved row is stamped (backend, jax device count, git rev) and
@@ -85,7 +86,8 @@ def bench_kernels(quick: bool = False):
 
 BENCHES = ("exit_profile", "convergence", "vary_devices", "vary_capacity",
            "vary_inference_time", "imperfect_csi", "kernels", "roofline",
-           "rollout_throughput", "sweep_throughput", "cost_attribution")
+           "rollout_throughput", "sweep_throughput", "pop_throughput",
+           "cost_attribution")
 
 
 def main(argv=None) -> None:
@@ -97,7 +99,13 @@ def main(argv=None) -> None:
     only = set(args.only.split(",")) if args.only else set(BENCHES)
     unknown = sorted(only - set(BENCHES))
     if unknown:
-        ap.error(f"unknown benchmark module(s): {', '.join(unknown)} "
+        import difflib
+        hints = []
+        for name in unknown:
+            close = difflib.get_close_matches(name, BENCHES, n=2)
+            hints.append(name + (f" (did you mean {' or '.join(close)}?)"
+                                 if close else ""))
+        ap.error(f"unknown benchmark module(s): {'; '.join(hints)} "
                  f"(choose from {', '.join(BENCHES)})")
 
     print("name,us_per_call,derived")
@@ -127,6 +135,15 @@ def main(argv=None) -> None:
             elif "cells_per_s" in r:
                 print(f"{r['name']},,cells_per_s={r['cells_per_s']};"
                       f"{r['derived']}")
+            elif "slots_per_s" in r:
+                extra = (f";vs_sequential="
+                         f"{r['vs_sequential_speedup']}x"
+                         if "vs_sequential_speedup" in r else "")
+                print(f"{r['name']},,slots_per_s={r['slots_per_s']}"
+                      f"{extra}")
+            elif "margin" in r:
+                print(f"{r['name']},,margin={r['margin']:+.4f};"
+                      f"curriculum_wins={r['curriculum_wins']}")
             elif "avg_accuracy" in r:
                 label = (f"{name}/{r['method']}-M{r['n_devices']}"
                          f"-t{int(r['slot_ms'])}")

@@ -17,8 +17,10 @@ comparison isolates the serving loop itself):
 The trace's arrival grid is compressed 8x relative to the engine's slot
 grid, so a >1k-deep backlog forms (reported as ``queue_depth_p99``) —
 the regime the acceptance bar names. Rows land in ``BENCH_serve.json``
-(merge semantics) and the run-history store; the continuous row carries
-``vs_sync_speedup`` and must beat the sync loop on requests/s.
+(merge semantics) and the run-history store; each row reports served
+*tokens*/s (every request's ``max_new`` decode budget) next to
+requests/s, and the continuous row carries ``vs_sync_speedup`` and must
+beat the sync loop on requests/s.
 """
 from __future__ import annotations
 
@@ -100,19 +102,27 @@ def run(quick: bool = False):
     _run_sync(sync, warm)
     _run_continuous(cont, warm)
 
+    base_tokens_sync = sync.tokens_served
     wall_sync = _run_sync(sync, main)
     served_sync = len(main)
+    tokens_sync = sync.tokens_served - base_tokens_sync
     rps_sync = served_sync / wall_sync
+    tps_sync = tokens_sync / wall_sync
     print(f"  sync       slots=4   {served_sync} reqs  "
-          f"{wall_sync:6.2f}s  {rps_sync:8.1f} req/s", flush=True)
+          f"{wall_sync:6.2f}s  {rps_sync:8.1f} req/s  "
+          f"{tps_sync:8.1f} tok/s", flush=True)
 
     base_served = cont.counts["served"]
+    base_tokens_cont = cont.tokens_served
     wall_cont = _run_continuous(cont, main)
     served_cont = cont.counts["served"] - base_served
+    tokens_cont = cont.tokens_served - base_tokens_cont
     rps_cont = served_cont / wall_cont
+    tps_cont = tokens_cont / wall_cont
     snap = cont.telemetry_snapshot()["summary"]
     print(f"  continuous slots={slots_cont:<3d} {served_cont} reqs  "
           f"{wall_cont:6.2f}s  {rps_cont:8.1f} req/s  "
+          f"{tps_cont:8.1f} tok/s  "
           f"(x{rps_cont / rps_sync:.2f}, queue_p99="
           f"{snap['queue_depth_p99']})", flush=True)
 
@@ -125,7 +135,9 @@ def run(quick: bool = False):
                         f"({served_sync} requests), scheduling plane only"),
             "wall_s": round(wall_sync, 3),
             "requests_per_s": round(rps_sync, 1),
+            "tokens_per_s": round(tps_sync, 1),
             "n_requests": served_sync,
+            "n_tokens": tokens_sync,
             "deadline_hit_rate": sync_snap["deadline_hit_rate"],
             "latency_p50_s": sync_snap["latency_p50_s_exact"],
             "latency_p99_s": sync_snap["latency_p99_s_exact"],
@@ -138,7 +150,9 @@ def run(quick: bool = False):
                         "8x the decode grid (>=1k backlog in full mode)"),
             "wall_s": round(wall_cont, 3),
             "requests_per_s": round(rps_cont, 1),
+            "tokens_per_s": round(tps_cont, 1),
             "n_requests": served_cont,
+            "n_tokens": tokens_cont,
             "deadline_hit_rate": snap["deadline_hit_rate_exact"],
             "latency_p50_s": snap["latency_p50_s_exact"],
             "latency_p99_s": snap["latency_p99_s_exact"],

@@ -291,14 +291,20 @@ class AgentDef:
 
     # ------------------------------------------------------------- decision
     def decide_with(self, params, exit_mask: jax.Array, mec_state: MECState,
-                    tasks: SlotTasks, key: jax.Array, sp=None):
+                    tasks: SlotTasks, key: jax.Array, sp=None,
+                    explore_gain=None):
         """Fused actor+critic pass with explicit (params, mask) — the
         primitive both ``decide`` and the legacy shim build on.
 
         ``sp`` is an optional ``ScenarioParams`` pytree threaded into the
         env's observe/evaluate — traced data, so callers can batch it
         (per-cell in sweep packs, per-fleet in domain-randomized
-        drivers). Returns (decision [M], q_best, graph).
+        drivers). ``explore_gain`` is an optional traced scalar biasing
+        the random candidates toward the actor's own relaxed scores
+        (Gumbel-max over ``x_hat * gain + gumbel``): gain 0 reproduces
+        the uniform draw bit-exactly, larger gains anneal exploration —
+        a per-member knob the population layer carries as state data.
+        Returns (decision [M], q_best, graph).
         """
         env = self.env
         obs = env.observe(mec_state, tasks, sp)
@@ -310,7 +316,9 @@ class AgentDef:
             allowed = (exit_mask[None, :] > 0.5) & (g.mask > 0.5)
             gumbel = jax.random.gumbel(
                 key, (self.n_random, *allowed.shape))
-            rand = jnp.argmax(jnp.where(allowed[None], gumbel, -jnp.inf),
+            noise = gumbel if explore_gain is None \
+                else x_hat[None] * explore_gain + gumbel
+            rand = jnp.argmax(jnp.where(allowed[None], noise, -jnp.inf),
                               axis=-1).astype(jnp.int32)
             cands = jnp.concatenate([cands, rand], axis=0)
         q = env.evaluate(mec_state, tasks, cands, sp)
@@ -318,7 +326,7 @@ class AgentDef:
         return cands[best], q[best], g
 
     def decide(self, state: AgentState, mec_state: MECState,
-               tasks: SlotTasks, key: jax.Array, sp=None):
+               tasks: SlotTasks, key: jax.Array, sp=None, explore_gain=None):
         """One slot's decision from the agent's own params and exit mask.
 
         Pure: does not consume ``state.key`` — the caller supplies the
@@ -326,7 +334,7 @@ class AgentDef:
         Returns (decision [M], q_best, graph).
         """
         return self.decide_with(state.params, state.exit_mask, mec_state,
-                                tasks, key, sp)
+                                tasks, key, sp, explore_gain)
 
     # ----------------------------------------------------------------- loss
     def loss(self, params, graphs: MECGraph, decisions, exit_mask):
@@ -355,11 +363,16 @@ class AgentDef:
         return jnp.mean((pos - neg) / denom)
 
     # ------------------------------------------------------------- training
-    def train_step(self, state: AgentState):
+    def train_step(self, state: AgentState, lr=None):
         """One Eq-16 minibatch update; advances ``state.key``.
 
-        Unconditional — callers gate on ``train_due``. Returns
-        (new state, loss).
+        Unconditional — callers gate on ``train_due``. ``lr`` is an
+        optional traced scalar overriding the def's static learning
+        rate: Adam's update is linear in lr and its moments are
+        lr-independent, so rescaling the updates by ``lr / self.lr`` is
+        exact — which makes the learning rate *state data* the
+        population layer can perturb per member without recompiling.
+        Returns (new state, loss).
         """
         key, k_samp = jax.random.split(state.key)
         graphs, decisions = replay_sample(state.replay, k_samp,
@@ -368,6 +381,9 @@ class AgentDef:
             state.params, graphs, decisions, state.exit_mask)
         updates, opt_state = self.opt.update(grads, state.opt_state,
                                              state.params)
+        if lr is not None:
+            scale = lr / self.lr
+            updates = jax.tree_util.tree_map(lambda u: u * scale, updates)
         loss = loss.astype(jnp.float32)
         new = state._replace(
             params=apply_updates(state.params, updates),
@@ -380,13 +396,14 @@ class AgentDef:
         return new, loss
 
     def absorb(self, state: AgentState, graphs: MECGraph,
-               decisions: jax.Array):
+               decisions: jax.Array, lr=None):
         """Record one slot's B (graph, decision) pairs, then maybe train.
 
         The one training-gating rule everywhere (host, loop, scan):
         every ``train_every`` slots *and* only once the ring holds a full
-        ``batch_size`` minibatch. Returns (new state, loss — NaN when no
-        train step ran).
+        ``batch_size`` minibatch. ``lr`` optionally overrides the static
+        learning rate as traced data (see ``train_step``). Returns
+        (new state, loss — NaN when no train step ran).
         """
         replay = replay_add(state.replay, graphs, decisions)
         step = state.step + 1
@@ -394,7 +411,7 @@ class AgentDef:
         due = ((step % self.train_every == 0)
                & (replay.size >= self.batch_size))
         return jax.lax.cond(
-            due, self.train_step,
+            due, lambda s: self.train_step(s, lr),
             lambda s: (s, jnp.full((), jnp.nan, jnp.float32)), state)
 
     # ----------------------------------------------------------- slot body

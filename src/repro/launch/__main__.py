@@ -2,6 +2,7 @@
 
 Commands:
   sweep       sharded (scenario x method x seed) experiment grids
+  pop         population training: vmapped PBT + scenario auto-curriculum
   serve       GRLE-scheduled early-exit LM serving driver
   serve-bench serving throughput: sync slot loop vs continuous batching
   train       LLM training-step driver
@@ -18,7 +19,7 @@ import sys
 
 
 def main() -> None:
-    commands = ("sweep", "serve", "serve-bench", "train", "dryrun",
+    commands = ("sweep", "pop", "serve", "serve-bench", "train", "dryrun",
                 "profile", "history")
     if len(sys.argv) < 2 or sys.argv[1] in ("-h", "--help"):
         print(__doc__)
@@ -29,6 +30,10 @@ def main() -> None:
         raise SystemExit(2)
     if cmd == "sweep":
         from repro.launch.sweep import main as run
+        run(argv)
+        return
+    if cmd == "pop":
+        from repro.launch.pop import main as run
         run(argv)
         return
     if cmd == "profile":

@@ -166,6 +166,71 @@ def scenario_space(lo: str = "fig5_baseline", hi: str = "fig8_csi",
     return ScenarioSpace(lo=a.scenario_params(), hi=b.scenario_params())
 
 
+# ------------------------------------------------- space-draw scenarios
+# A sweep-grid column can be one *draw* from a ScenarioSpace instead of
+# a named scenario. The draw is addressed by a canonical string --
+# "space:<lo>:<hi>:<draw>:<seed>" -- so sweep cells stay plain hashable
+# tuples: the name alone (plus the usual n_devices/slot_ms/overrides)
+# fully determines the sampled ScenarioParams, which keeps cell hashes
+# stable and stores resumable across processes.
+SPACE_PREFIX = "space:"
+
+
+def space_scenario_name(lo: str, hi: str, draw: int,
+                        space_seed: int = 0) -> str:
+    """The canonical name of one deterministic draw from the (lo, hi)
+    scenario space."""
+    return f"{SPACE_PREFIX}{lo}:{hi}:{int(draw)}:{int(space_seed)}"
+
+
+def is_space_scenario(name: str) -> bool:
+    return isinstance(name, str) and name.startswith(SPACE_PREFIX)
+
+
+def parse_space_scenario(name: str):
+    """``space:<lo>:<hi>:<draw>:<seed>`` -> (lo, hi, draw, seed).
+
+    Corners must be named scenarios; draw/seed must be ints. Raises
+    ``ValueError`` on anything else (``SweepSpec`` validation calls
+    this).
+    """
+    parts = name.split(":")
+    if len(parts) != 5 or parts[0] != "space":
+        raise ValueError(
+            f"malformed space scenario {name!r}; expected "
+            f"'space:<lo>:<hi>:<draw>:<seed>'")
+    _, lo, hi, draw, seed = parts
+    for corner in (lo, hi):
+        if corner not in SCENARIOS:
+            raise ValueError(f"space corner {corner!r} not in "
+                             f"{sorted(SCENARIOS)}")
+    try:
+        draw_i, seed_i = int(draw), int(seed)
+    except ValueError:
+        raise ValueError(f"space draw/seed must be ints in {name!r}")
+    return lo, hi, draw_i, seed_i
+
+
+def resolve_scenario(name: str, **kwargs):
+    """Name -> ``(MECConfig, Optional[ScenarioParams])``.
+
+    Named scenarios resolve to their config and ``None`` (the env's own
+    params apply). Space names resolve to the *lo corner's* config (the
+    compiled structure — both corners share it by ``scenario_space``'s
+    check) plus the draw's sampled knobs: draw i under seed s is
+    ``space.sample(fold_in(PRNGKey(s), i))``, independent of the draw
+    count, so growing a sweep's draw axis never perturbs existing cells.
+    ``kwargs`` go to ``make_scenario`` (``n_devices``, ``slot_ms``,
+    overrides).
+    """
+    if not is_space_scenario(name):
+        return make_scenario(name, **kwargs), None
+    lo, hi, draw, seed = parse_space_scenario(name)
+    space = scenario_space(lo, hi, **kwargs)
+    sp = space.sample(jax.random.fold_in(jax.random.PRNGKey(seed), draw))
+    return make_scenario(lo, **kwargs), sp
+
+
 def expand_grid(names=None, **axes):
     """Cartesian expansion of scenario names with config-override axes.
 

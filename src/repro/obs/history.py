@@ -10,7 +10,7 @@ JSON object per line.
 
 Record schema (``schema: 1``)::
 
-    {"schema": 1, "kind": "bench" | "sweep" | "serve",
+    {"schema": 1, "kind": "bench" | "sweep" | "serve" | "pop",
      "name": "<row/cell/snapshot label>", "ts": <unix seconds>,
      "metrics": {"steps_per_s": ..., ...},       # finite numbers or null
      "manifest": {"git_rev": ..., "backend": ..., "n_devices": ...,
@@ -24,8 +24,9 @@ regression sentinel (``obs/regress.py``) only compares records sharing
 never gates a TPU number. Producers: ``benchmarks/common.save_rows`` /
 ``merge_bench_rows`` append one ``bench`` record per row,
 ``sweep.runner.run_sweep(..., history=...)`` one ``sweep`` record per
-executed cell, and ``EdgeServingEngine.telemetry_snapshot(history=...)``
-one ``serve`` record per snapshot.
+executed cell, ``EdgeServingEngine.telemetry_snapshot(history=...)``
+one ``serve`` record per snapshot, and
+``pop.trainer.PopulationTrainer`` one ``pop`` record per generation.
 """
 from __future__ import annotations
 
@@ -37,7 +38,7 @@ from typing import Optional
 from repro.obs.log import json_safe, run_manifest
 
 HISTORY_SCHEMA = 1
-HISTORY_KINDS = ("bench", "sweep", "serve")
+HISTORY_KINDS = ("bench", "sweep", "serve", "pop")
 HISTORY_ENV = "REPRO_HISTORY"
 DEFAULT_ROOT = os.path.join("results", "history")
 # Manifest keys two records must share to be compared by the sentinel.

@@ -303,6 +303,60 @@ def serve_telemetry_update(tel: Telemetry, admitted, served, expired,
     return Telemetry(counters=c, hists=h, loss_ema=tel.loss_ema)
 
 
+# ---------------------------------------------------- population registry
+# Generation-level counters for the population training layer
+# (``repro.pop``): how much PBT surgery and curriculum resampling has
+# happened, device-resident like everything else in the registry.
+POP_COUNTERS = (
+    "generations",     # training generations completed
+    "pbt_rounds",      # exploit/explore steps taken
+    "exploits",        # members replaced by truncation selection
+    "resamples",       # curriculum scenario draws taken (member-episodes)
+)
+
+
+def pop_telemetry(n_members: int, n_regions: int) -> Telemetry:
+    """A standalone registry for the population trainer.
+
+    Histograms (one bucket per integer value):
+      member_rank — pre-surgery rank of the member each PBT copy was
+                    sourced from (0 = best; mass near 0 means exploit
+                    really copies winners)
+      region      — curriculum-region visitation counts over the run
+                    (flat for the DR control arm, peaked on hard regions
+                    for the curriculum arm)
+    """
+    edges = {
+        "member_rank": jnp.arange(n_members + 1, dtype=jnp.float32) - 0.5,
+        "region": jnp.arange(n_regions + 1, dtype=jnp.float32) - 0.5,
+    }
+    return telemetry_init(POP_COUNTERS, edges)
+
+
+def pop_telemetry_update(tel: Telemetry, *, region, src_ranks=None,
+                         copied=None) -> Telemetry:
+    """Fold one generation into the registry.
+
+    ``region`` is the generation's [P] curriculum draws; ``src_ranks``
+    / ``copied`` come from ``pop.pbt.PBTStats`` (``ranks[src]`` and the
+    replaced-member mask) and may be None on generations without a PBT
+    round.
+    """
+    c = dict(tel.counters)
+    region = jnp.asarray(region, jnp.float32)
+    c["generations"] = c["generations"] + 1.0
+    c["resamples"] = c["resamples"] + float(region.shape[0])
+    h = dict(tel.hists)
+    h["region"] = hist_add(h["region"], region)
+    if copied is not None:
+        copied = jnp.asarray(copied, jnp.float32)
+        c["pbt_rounds"] = c["pbt_rounds"] + 1.0
+        c["exploits"] = c["exploits"] + copied.sum()
+        h["member_rank"] = hist_add(
+            h["member_rank"], jnp.asarray(src_ranks, jnp.float32), copied)
+    return Telemetry(counters=c, hists=h, loss_ema=tel.loss_ema)
+
+
 # ------------------------------------------------------------- host views
 def telemetry_host(tel: Telemetry, index: Optional[int] = None) -> dict:
     """One device->host transfer of the whole registry, JSON-ready.

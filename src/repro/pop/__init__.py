@@ -1,0 +1,34 @@
+"""Population-scale training: vmapped agent populations over a scenario
+curriculum, with PBT exploit/explore as pure pytree surgery.
+
+The subsystem is three pure layers plus a host-side driver:
+
+* ``population`` — the ``Population`` pytree (stacked ``AgentState`` on
+  a leading P axis + per-member hyperparameters as *state data*) and the
+  ``PopulationDriver`` that runs one generation for all members as a
+  constant number of compiled programs independent of P;
+* ``pbt`` — periodic truncation-select exploit/explore as gathers and
+  ``where``s on the population axis, deterministic in its key;
+* ``curriculum`` — auto-curriculum over a ``ScenarioSpace``: per-region
+  difficulty scores steer each generation's per-member scenario draws
+  toward hard regions (``uniform=True`` is the domain-randomized
+  control arm);
+* ``trainer`` — the generation loop gluing them together, with
+  bit-exact checkpoint/resume, telemetry, and run-history records.
+"""
+from repro.pop.curriculum import Curriculum, CurriculumState
+from repro.pop.pbt import PBTConfig, PBTStats, pbt_update
+from repro.pop.population import (MemberHypers, Population, PopulationDriver,
+                                  default_hypers, exit_mask_from_tau,
+                                  init_population, sample_hypers)
+from repro.pop.trainer import (PopTrainState, PopulationTrainer,
+                               compare_curriculum_dr, format_comparison)
+
+__all__ = [
+    "MemberHypers", "Population", "PopulationDriver", "init_population",
+    "default_hypers", "sample_hypers", "exit_mask_from_tau",
+    "PBTConfig", "PBTStats", "pbt_update",
+    "Curriculum", "CurriculumState",
+    "PopulationTrainer", "PopTrainState", "compare_curriculum_dr",
+    "format_comparison",
+]

@@ -1,0 +1,97 @@
+"""Auto-curriculum over a ``ScenarioSpace``: sample where it hurts.
+
+The space between two corner scenarios (``mec.scenarios.ScenarioSpace``)
+is carved into R equal *regions* along the lo -> hi interpolation axis
+t in [0, 1]. Each generation:
+
+* ``resample`` draws one region per member — softmax over ``-score/T``
+  so low-scoring (hard) regions are drawn more often — then a uniform
+  offset inside the region, and materializes the member's
+  ``ScenarioParams`` with ``interpolate_params`` (jit-pure, vmapped, no
+  recompile across draws);
+* ``update`` folds the generation's per-member rewards back into the
+  visited regions' score EMAs (first visit seeds the EMA directly).
+
+``uniform=True`` ignores scores and draws regions uniformly — the
+domain-randomized control arm, sharing every other code path, which is
+what makes the curriculum-vs-DR comparison in
+``examples/pop_curriculum.py`` an honest ablation.
+
+``CurriculumState`` is a two-leaf pytree ([R] scores + visit counts) and
+checkpoints alongside the ``Population``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.mec.config import ScenarioParams
+from repro.mec.scenarios import interpolate_params
+
+
+class CurriculumState(NamedTuple):
+    """Per-region difficulty estimates (all [R] float32)."""
+    score: jax.Array   # EMA of member avg_reward per region
+    visits: jax.Array  # total member-episodes run in the region
+
+
+@dataclasses.dataclass(frozen=True)
+class Curriculum:
+    """A difficulty-driven sampler over one scenario interpolation axis.
+
+    ``lo``/``hi`` are the corner ``ScenarioParams`` (from
+    ``scenario_space`` — same static signature, one compiled shape).
+    """
+    lo: ScenarioParams
+    hi: ScenarioParams
+    n_regions: int = 8
+    temperature: float = 0.3   # softmax temperature over -score
+    ema: float = 0.7           # score EMA retention per visited generation
+    uniform: bool = False      # True = domain-randomized control arm
+
+    def init_state(self) -> CurriculumState:
+        z = jnp.zeros((self.n_regions,), jnp.float32)
+        return CurriculumState(score=z, visits=z)
+
+    def resample(self, state: CurriculumState, key: jax.Array,
+                 n_members: int):
+        """Draw one scenario per member; returns ``(region [P] int32,
+        sps [P]-leading ScenarioParams)``. Jit-pure and deterministic in
+        ``key``; the DR arm (``uniform=True``) uses flat logits but the
+        identical draw structure, so both arms consume randomness the
+        same way."""
+        logits = (jnp.zeros((self.n_regions,), jnp.float32) if self.uniform
+                  else -state.score / self.temperature)
+        k_region, k_offset = jax.random.split(key)
+        region = jax.random.categorical(k_region, logits,
+                                        shape=(n_members,))
+        u = jax.random.uniform(k_offset, (n_members,), jnp.float32)
+        t = (region.astype(jnp.float32) + u) / float(self.n_regions)
+        sps = jax.vmap(lambda ti: interpolate_params(self.lo, self.hi,
+                                                     ti))(t)
+        return region.astype(jnp.int32), sps
+
+    def update(self, state: CurriculumState, region: jax.Array,
+               scores: jax.Array) -> CurriculumState:
+        """Fold one generation's [P] member scores into the region EMAs.
+
+        Unvisited regions keep their score; a region's first-ever visit
+        takes the batch mean directly (no stale-zero blending).
+        """
+        onehot = (region[:, None] ==
+                  jnp.arange(self.n_regions)[None, :]).astype(jnp.float32)
+        counts = onehot.sum(axis=0)                              # [R]
+        mean = ((scores.astype(jnp.float32)[:, None] * onehot).sum(axis=0)
+                / jnp.maximum(counts, 1.0))
+        visited = counts > 0
+        first = state.visits == 0
+        blended = jnp.where(first, mean,
+                            self.ema * state.score
+                            + (1.0 - self.ema) * mean)
+        return CurriculumState(
+            score=jnp.where(visited, blended, state.score),
+            visits=state.visits + counts,
+        )

@@ -1,0 +1,104 @@
+"""Population-based training exploit/explore as pure pytree surgery.
+
+PBT (Jaderberg et al. 2017) periodically replaces the worst members of
+a population with copies of the best, then perturbs the copies'
+hyperparameters. Because a ``Population`` is one pytree with a member
+axis and its hyperparameters are data (``MemberHypers``), the whole
+exploit/explore step is a gather plus a few ``where``s — no Python loop
+over members, no recompile, and it vmaps/jits/shards like everything
+else on the P axis.
+
+``pbt_update`` is a pure function of ``(pop, scores, key, cfg)``:
+
+* rank members by score (higher = better; ties broken by member index,
+  so the surgery is fully deterministic in its inputs);
+* the bottom ``frac`` of members each copy a distinct member from the
+  top ``frac`` (best winner overwrites worst loser) — params, opt
+  state, replay, *and* hyperparameters;
+* only the copied members' hyperparameters are perturbed: lr multiplied
+  or divided by ``lr_factor`` (a fair coin per member), additive jitter
+  on ``explore_gain``/``exit_tau``, all clipped back into the search
+  box.
+
+Same key => identical surgery (pinned by ``tests/test_pop.py``), which
+is what makes a checkpointed PBT run resume bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.pop.population import (GAIN_RANGE, LR_RANGE, TAU_RANGE,
+                                  MemberHypers, Population)
+
+
+@dataclasses.dataclass(frozen=True)
+class PBTConfig:
+    """Static knobs of the exploit/explore step."""
+    frac: float = 0.25          # fraction replaced (and copied from)
+    lr_factor: float = 1.25     # multiplicative lr perturbation
+    gain_jitter: float = 0.25   # +- uniform jitter on explore_gain
+    tau_jitter: float = 0.05    # +- uniform jitter on exit_tau
+    lr_range: Tuple[float, float] = LR_RANGE
+    gain_range: Tuple[float, float] = GAIN_RANGE
+    tau_range: Tuple[float, float] = TAU_RANGE
+
+    def n_exploit(self, n_members: int) -> int:
+        """How many members are replaced (static, >= 1)."""
+        return max(1, int(round(n_members * self.frac)))
+
+
+class PBTStats(NamedTuple):
+    """Device-resident record of one exploit/explore step."""
+    src: jax.Array     # [P] int32 — member each slot was copied from
+                       #   (identity for survivors)
+    copied: jax.Array  # [P] float32 — 1.0 where the member was replaced
+    ranks: jax.Array   # [P] int32 — pre-surgery rank (0 = best)
+
+
+def pbt_update(pop: Population, scores: jax.Array, key: jax.Array,
+               cfg: PBTConfig = PBTConfig()):
+    """One exploit/explore step; returns ``(new pop, PBTStats)``.
+
+    ``scores`` is the [P] per-member fitness (higher is better —
+    ``metrics["avg_reward"]`` from the generation that just ran). The
+    generation counter advances by one. Jit-pure; deterministic in
+    ``key``.
+    """
+    n = scores.shape[0]
+    k = cfg.n_exploit(n)
+    # stable ascending argsort: losers first, ties broken by index
+    order = jnp.argsort(scores.astype(jnp.float32))
+    losers, winners = order[:k], order[n - k:]
+    # best winner (last of `winners`) overwrites worst loser (first of
+    # `losers`)
+    src = jnp.arange(n, dtype=jnp.int32).at[losers].set(
+        winners[::-1].astype(jnp.int32))
+    copied = jnp.zeros((n,), jnp.float32).at[losers].set(1.0)
+    ranks = jnp.zeros((n,), jnp.int32).at[order[::-1]].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+    agents = jax.tree_util.tree_map(lambda x: x[src], pop.agents)
+    hyp = jax.tree_util.tree_map(lambda x: x[src], pop.hypers)
+
+    k_coin, k_gain, k_tau = jax.random.split(key, 3)
+    up = jax.random.bernoulli(k_coin, 0.5, (n,))
+    lr = hyp.lr * jnp.where(up, cfg.lr_factor, 1.0 / cfg.lr_factor)
+    gain = hyp.explore_gain + jax.random.uniform(
+        k_gain, (n,), jnp.float32, -cfg.gain_jitter, cfg.gain_jitter)
+    tau = hyp.exit_tau + jax.random.uniform(
+        k_tau, (n,), jnp.float32, -cfg.tau_jitter, cfg.tau_jitter)
+    sel = copied > 0.5
+    hyp = MemberHypers(
+        lr=jnp.where(sel, jnp.clip(lr, *cfg.lr_range), hyp.lr),
+        explore_gain=jnp.where(sel, jnp.clip(gain, *cfg.gain_range),
+                               hyp.explore_gain),
+        exit_tau=jnp.where(sel, jnp.clip(tau, *cfg.tau_range),
+                           hyp.exit_tau),
+    )
+    new = Population(agents=agents, hypers=hyp,
+                     generation=pop.generation + 1)
+    return new, PBTStats(src=src, copied=copied, ranks=ranks)

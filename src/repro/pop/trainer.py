@@ -1,0 +1,243 @@
+"""The population generation loop: rollout -> rank -> exploit/explore ->
+curriculum resample, checkpointable between any two generations.
+
+``PopulationTrainer`` owns the static pieces (driver, PBT config,
+curriculum, telemetry/history sinks); everything mutable lives in
+``PopTrainState`` — the ``Population`` (including its generation
+counter) plus the ``CurriculumState`` — one pytree that round-trips
+through ``train.checkpoint.save_population`` bit-exactly.
+
+Determinism contract: every random draw of generation g is keyed by
+``fold_in(fold_in(root, tag), g)`` with the generation counter read
+*from the state*, so restoring a checkpoint and continuing reproduces
+the uninterrupted run's draws exactly (``tests/test_pop.py`` pins the
+whole loop, surgery included).
+
+One generation is a constant number of compiled programs independent of
+the population size P — the jitted resample / begin / episode /
+curriculum-update / PBT programs, each tracked by ``tracked_programs``
+for the ``pop_throughput --guard`` compile assertion.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import AgentDef
+from repro.mec.scenarios import interpolate_params
+from repro.obs.telemetry import pop_telemetry, pop_telemetry_update
+from repro.pop.curriculum import Curriculum, CurriculumState
+from repro.pop.pbt import PBTConfig, pbt_update
+from repro.pop.population import (Population, PopulationDriver,
+                                  init_population, sample_hypers)
+
+
+class PopTrainState(NamedTuple):
+    """Everything mutable across generations, as one checkpointable
+    pytree."""
+    pop: Population
+    cur: CurriculumState
+
+
+class PopulationTrainer:
+    """Runs PBT generations for P members over a scenario curriculum.
+
+    ``curriculum.uniform=True`` turns the same trainer into the
+    domain-randomized control arm. ``telemetry=True`` attaches a
+    ``pop_telemetry`` registry (member-rank / region-visitation
+    histograms, exploit counters); ``history`` (a
+    ``obs.history.HistoryStore``) gets one ``pop`` record per
+    generation.
+    """
+
+    def __init__(self, adef: AgentDef, curriculum: Curriculum, *,
+                 n_members: int = 8, n_fleets: int = 1, n_slots: int = 60,
+                 pbt: PBTConfig = PBTConfig(), pbt_every: int = 1,
+                 seed: int = 0, mesh="auto",
+                 replay_capacity: Optional[int] = None,
+                 batch_size: Optional[int] = None,
+                 train_every: Optional[int] = None,
+                 telemetry: bool = False, history=None,
+                 history_name: str = "pop_train"):
+        self.driver = PopulationDriver(
+            adef, n_fleets=n_fleets, n_slots=n_slots, mesh=mesh,
+            replay_capacity=replay_capacity, batch_size=batch_size,
+            train_every=train_every)
+        self.adef = self.driver.adef
+        self.curriculum = curriculum
+        self.pbt_cfg = pbt
+        self.pbt_every = int(pbt_every)
+        self.n_members = int(n_members)
+        self.root = jax.random.PRNGKey(seed)
+        self.telemetry = (pop_telemetry(self.n_members,
+                                        curriculum.n_regions)
+                          if telemetry else None)
+        self.history = history
+        self.history_name = history_name
+        n = self.n_members
+        self._resample_fn = jax.jit(
+            lambda st, key: curriculum.resample(st, key, n))
+        self._cur_update_fn = jax.jit(curriculum.update)
+        self._pbt_fn = jax.jit(
+            lambda pop, scores, key: pbt_update(pop, scores, key, pbt))
+
+    # The jitted programs one generation dispatches — what the compile
+    # guard asserts stays constant as P grows.
+    def tracked_programs(self) -> dict:
+        progs = dict(self.driver.tracked_programs())
+        progs.update({"pop_resample": self._resample_fn,
+                      "pop_cur_update": self._cur_update_fn,
+                      "pop_pbt": self._pbt_fn})
+        return progs
+
+    # ----------------------------------------------------------------- state
+    def init_state(self, *, sampled_hypers: bool = True) -> PopTrainState:
+        """Fresh population (+ sampled per-member hyperparameters unless
+        ``sampled_hypers=False``) and a blank curriculum."""
+        k_pop, k_hyp = jax.random.split(jax.random.fold_in(self.root, 0))
+        hyp = (sample_hypers(k_hyp, self.n_members)
+               if sampled_hypers else None)
+        pop = init_population(self.adef, k_pop, self.n_members, hyp)
+        return PopTrainState(pop=pop, cur=self.curriculum.init_state())
+
+    def _gen_key(self, tag: int, generation) -> jax.Array:
+        return jax.random.fold_in(jax.random.fold_in(self.root, tag),
+                                  generation)
+
+    # ------------------------------------------------------------ generation
+    def generation(self, ts: PopTrainState):
+        """One full generation; returns ``(new state, report dict)``.
+
+        resample -> rollout (train) -> rank by device-resident
+        ``avg_reward`` -> curriculum update -> PBT exploit/explore
+        (every ``pbt_every`` generations). All keys derive from the
+        state's generation counter, so the loop is resumable mid-stream.
+        """
+        g = ts.pop.generation
+        region, sps = self._resample_fn(ts.cur, self._gen_key(1, g))
+        pop, mets = self.driver.run_generation(ts.pop, self._gen_key(2, g),
+                                               sps)
+        scores = mets["avg_reward"]
+        cur = self._cur_update_fn(ts.cur, region, scores)
+        stats = None
+        if (int(g) + 1) % self.pbt_every == 0:
+            pop, stats = self._pbt_fn(pop, scores, self._gen_key(3, g))
+        else:
+            pop = pop._replace(generation=pop.generation + 1)
+
+        if self.telemetry is not None:
+            self.telemetry = pop_telemetry_update(
+                self.telemetry, region=region,
+                src_ranks=None if stats is None else stats.ranks[stats.src],
+                copied=None if stats is None else stats.copied)
+        report = self._report(int(g), mets, region, stats)
+        if self.history is not None:
+            self.history.append(
+                "pop", self.history_name, report["metrics"],
+                generation=report["generation"], arm=report["arm"])
+        return PopTrainState(pop=pop, cur=cur), report
+
+    def train(self, ts: PopTrainState, n_generations: int):
+        """Run ``n_generations``; returns ``(state, list of reports)``."""
+        reports = []
+        for _ in range(n_generations):
+            ts, rep = self.generation(ts)
+            reports.append(rep)
+        return ts, reports
+
+    def evaluate(self, pop: Population, key: jax.Array, sp):
+        """Member scores on one held-out scenario, training off (see
+        ``PopulationDriver.evaluate``)."""
+        return self.driver.evaluate(pop, key, sp)
+
+    # -------------------------------------------------------------- reporting
+    def _report(self, generation: int, mets: dict, region, stats) -> dict:
+        scores = np.asarray(mets["avg_reward"], np.float64)
+        best = int(scores.argmax())
+        metrics = {
+            "mean_reward": float(scores.mean()),
+            "best_reward": float(scores[best]),
+            "worst_reward": float(scores.min()),
+            "mean_ssp": float(np.asarray(mets["ssp"]).mean()),
+            "mean_accuracy": float(np.asarray(mets["avg_accuracy"]).mean()),
+            "exploits": (0.0 if stats is None
+                         else float(np.asarray(stats.copied).sum())),
+        }
+        return {
+            "generation": generation,
+            "arm": "dr" if self.curriculum.uniform else "curriculum",
+            "best_member": best,
+            "region_visits": np.bincount(
+                np.asarray(region),
+                minlength=self.curriculum.n_regions).tolist(),
+            "metrics": metrics,
+        }
+
+
+def compare_curriculum_dr(adef: AgentDef, space, *, n_members: int = 8,
+                          n_fleets: int = 2, n_slots: int = 80,
+                          generations: int = 6, n_regions: int = 6,
+                          temperature: float = 0.3, seed: int = 0,
+                          pbt: PBTConfig = PBTConfig(),
+                          pbt_every: int = 1,
+                          eval_points=(0.8, 0.9, 1.0),
+                          eval_seed: int = 7,
+                          replay_capacity: Optional[int] = None,
+                          batch_size: Optional[int] = None,
+                          train_every: Optional[int] = None) -> dict:
+    """Train a curriculum arm and a DR control arm, evaluate both on
+    held-out *hard* scenarios (high-t points of the space), paired keys.
+
+    Both arms share the agent def, population seed, PBT config and every
+    eval key — the only difference is ``Curriculum.uniform`` — so the
+    returned margin isolates the curriculum's contribution. Used by
+    ``examples/pop_curriculum.py`` and the ``pop_throughput`` benchmark
+    report.
+    """
+    out = {"eval_points": list(eval_points), "arms": {}}
+    for arm, uniform in (("curriculum", False), ("dr", True)):
+        cur = Curriculum(space.lo, space.hi, n_regions=n_regions,
+                         temperature=temperature, uniform=uniform)
+        tr = PopulationTrainer(
+            adef, cur, n_members=n_members, n_fleets=n_fleets,
+            n_slots=n_slots, pbt=pbt, pbt_every=pbt_every, seed=seed,
+            replay_capacity=replay_capacity, batch_size=batch_size,
+            train_every=train_every)
+        ts, reports = tr.train(tr.init_state(), generations)
+        evals = []
+        for i, t in enumerate(eval_points):
+            sp = interpolate_params(space.lo, space.hi,
+                                    jnp.float32(t))
+            mets = tr.evaluate(
+                ts.pop, jax.random.fold_in(jax.random.PRNGKey(eval_seed),
+                                           i), sp)
+            evals.append(float(np.asarray(mets["avg_reward"]).mean()))
+        out["arms"][arm] = {
+            "eval_rewards": evals,
+            "eval_mean": float(np.mean(evals)),
+            "final_train": reports[-1]["metrics"],
+            "region_visits": np.sum(
+                [r["region_visits"] for r in reports], axis=0).tolist(),
+        }
+    cur_mean = out["arms"]["curriculum"]["eval_mean"]
+    dr_mean = out["arms"]["dr"]["eval_mean"]
+    out["margin"] = cur_mean - dr_mean
+    out["curriculum_wins"] = bool(cur_mean > dr_mean)
+    return out
+
+
+def format_comparison(result: dict) -> str:
+    """The curriculum-vs-DR summary table, one line per held-out point."""
+    lines = ["arm         " + "".join(f"  t={t:<6g}" for t
+                                      in result["eval_points"])
+             + "  mean"]
+    for arm in ("curriculum", "dr"):
+        row = result["arms"][arm]
+        lines.append(f"{arm:<12}"
+                     + "".join(f"  {v:<8.4f}" for v in row["eval_rewards"])
+                     + f"  {row['eval_mean']:.4f}")
+    lines.append(f"margin (curriculum - dr): {result['margin']:+.4f}")
+    return "\n".join(lines)

@@ -187,22 +187,26 @@ class RolloutDriver:
         )
 
     # ------------------------------------------------------------- slot body
-    def _slot(self, carry: RolloutCarry, sp=None):
+    def _slot(self, carry: RolloutCarry, sp=None, hypers=None):
         """One slot for all fleets. The agent's params and exit mask come
         from ``carry.agent_state`` (the sweep packer batches whole states
         over its cell axis). ``sp`` is the slot's ScenarioParams —
         per-fleet ([B]-leading) when the driver was built with
-        ``per_fleet_scenarios=True``, else shared."""
+        ``per_fleet_scenarios=True``, else shared. ``hypers`` optionally
+        carries traced per-episode hyperparameters (anything with ``lr``
+        and ``explore_gain`` scalar attributes — the population layer's
+        ``MemberHypers``); None keeps the static def's values."""
         task_keys, task_subs = VecMECEnv.split_keys(carry.task_keys)
         dec_keys, dec_subs = VecMECEnv.split_keys(carry.dec_keys)
         agent = carry.agent_state
+        gain = None if hypers is None else hypers.explore_gain
 
         def fleet(env_state, wl_state, tk, dk, s):
             with phase("sample"):
                 wl_state, tasks = self.workload.sample(wl_state, tk, s)
             with phase("actor"):
-                decision, q_best, g = self.adef.decide(agent, env_state,
-                                                       tasks, dk, s)
+                decision, q_best, g = self.adef.decide(
+                    agent, env_state, tasks, dk, s, explore_gain=gain)
             with phase("env_step"):
                 new_state, result = self.env.step(env_state, tasks,
                                                   decision, s)
@@ -217,7 +221,9 @@ class RolloutDriver:
         loss = jnp.full((), jnp.nan, jnp.float32)
         if self.train:
             with phase("train"):
-                agent, loss = self.adef.absorb(agent, graphs, decisions)
+                agent, loss = self.adef.absorb(
+                    agent, graphs, decisions,
+                    lr=None if hypers is None else hypers.lr)
 
         # dtype-normalized outputs: identical between scan and loop modes
         decisions = decisions.astype(jnp.int32)

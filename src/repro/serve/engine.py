@@ -192,6 +192,10 @@ class _ServingCore:
         # over the recent window
         self._latency_ring: collections.deque = collections.deque(
             maxlen=latency_ring)
+        # generated-token accounting: each served request contributes its
+        # ``max_new`` budget (the synthetic decode payload is exactly that
+        # long), so throughput reads as tokens/s next to requests/s
+        self.tokens_served = 0
         self.transfers = {"decode_h2d": 0, "decode_d2h": 0,
                           "telemetry_pulls": 0}
         self._tel_update = jax.jit(
@@ -326,6 +330,7 @@ class _ServingCore:
                        (99, "latency_p99_s_exact")):
             summary[key] = (float(np.percentile(ring, q)) if ring.size
                             else None)
+        summary["tokens_served"] = int(self.tokens_served)
         self._extra_summary(summary)
         host["summary"] = summary
         self.transfers["telemetry_pulls"] += 1
@@ -450,6 +455,7 @@ class EdgeServingEngine(_ServingCore):
         self._latency_ring.extend(tt[act_mask & np.isfinite(tt)].tolist())
 
         assignments = [self._assignment(decision, slot) for slot in slot_ids]
+        self.tokens_served += sum(r.max_new for r in requests)
         texts = None
         if decode:
             by_exit = {}
@@ -731,6 +737,7 @@ class ContinuousServingEngine(_ServingCore):
                    and req.arrival_s + total <= req.deadline_s)
             self.counts["served"] += 1
             self.counts["hits"] += int(hit)
+            self.tokens_served += req.max_new
             if math.isfinite(total):
                 self._latency_ring.append(float(total))
             if self.pool is not None and running.variant:

@@ -20,7 +20,7 @@ from __future__ import annotations
 from typing import NamedTuple, Tuple
 
 from repro.core.policy import actor_family
-from repro.mec.scenarios import make_scenario
+from repro.mec.scenarios import resolve_scenario
 from repro.sweep.spec import Cell
 
 
@@ -51,10 +51,12 @@ def _shape_sig(cell: Cell):
     Combines the run shape (cell fields) with the scenario's static
     structure (``MECConfig.static_signature()``: counts, workload family,
     early-exit flag, slot length) — numeric knobs are deliberately absent,
-    they travel as ``ScenarioParams`` data.
+    they travel as ``ScenarioParams`` data. ``space:`` draw cells resolve
+    to their lo corner's structure, so a whole draw axis shares one pack
+    per actor family.
     """
-    cfg = make_scenario(cell.scenario, n_devices=cell.n_devices,
-                        slot_ms=cell.slot_ms, **dict(cell.overrides))
+    cfg, _ = resolve_scenario(cell.scenario, n_devices=cell.n_devices,
+                              slot_ms=cell.slot_ms, **dict(cell.overrides))
     return (actor_family(cell.method), cell.n_slots, cell.n_fleets,
             cell.replay_capacity, cell.batch_size, cell.train_every,
             cfg.static_signature())

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core.policy import AgentDef, agent_def
 from repro.mec.env import MECEnv
-from repro.mec.scenarios import make_scenario
+from repro.mec.scenarios import resolve_scenario
 from repro.obs.log import json_safe
 from repro.obs.telemetry import telemetry_host, telemetry_summary
 from repro.rollout.driver import (RolloutDriver, carry_metrics,
@@ -42,10 +42,18 @@ from repro.sweep.spec import Cell, SweepSpec, cell_keys
 from repro.sweep.store import SweepStore
 
 
+def _resolve_cell(cell: Cell):
+    """(env, sp): the cell's env plus its sampled ``ScenarioParams`` —
+    None for named scenarios (the env's own params apply), the
+    deterministic draw for ``space:`` cells."""
+    cfg, sp = resolve_scenario(cell.scenario, n_devices=cell.n_devices,
+                               slot_ms=cell.slot_ms,
+                               **dict(cell.overrides))
+    return MECEnv(cfg), sp
+
+
 def _scenario_env(cell: Cell) -> MECEnv:
-    cfg = make_scenario(cell.scenario, n_devices=cell.n_devices,
-                        slot_ms=cell.slot_ms, **dict(cell.overrides))
-    return MECEnv(cfg)
+    return _resolve_cell(cell)[0]
 
 
 def _cell_def(cell: Cell, env: MECEnv, *, method: Optional[str] = None,
@@ -101,9 +109,13 @@ class PackProgram:
         masks = jnp.stack([_cell_def(c, env).exit_mask() for c in cells])
         # each cell's scenario knobs, stacked along the cell axis — this
         # is what lets one compiled episode serve a mixed-scenario pack
+        # (space-draw cells contribute their sampled params)
+        def cell_params(c):
+            env_c, sp = _resolve_cell(c)
+            return sp if sp is not None else env_c.params
+
         sps = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs),
-            *[_scenario_env(c).params for c in cells])
+            lambda *xs: jnp.stack(xs), *[cell_params(c) for c in cells])
 
         # pad the cell axis up to the device count (results discarded)
         n_real = len(cells)
@@ -169,12 +181,14 @@ def run_pack(pack: Pack, *, mesh=None,
 def run_cell(cell: Cell, *, use_pallas: Optional[bool] = None,
              telemetry: bool = False) -> dict:
     """One cell through a plain ``RolloutDriver`` (reference/baseline)."""
-    env = _scenario_env(cell)
+    env, sp = _resolve_cell(cell)
     pkey, rkey = cell_keys(cell)
     adef = _cell_def(cell, env, use_pallas=use_pallas)
     drv = RolloutDriver(adef, n_fleets=cell.n_fleets, telemetry=telemetry)
+    # sp is None for named scenarios (byte-identical legacy path); a
+    # space cell's draw rides in as shared-across-fleets traced data
     carry, _ = drv.run(rkey, cell.n_slots, mode="scan",
-                       agent_state=adef.init(pkey))
+                       agent_state=adef.init(pkey), sp=sp)
     row = carry_metrics(carry, slot_s=env.cfg.slot_s,
                         n_fleets=cell.n_fleets)
     if telemetry:
@@ -253,8 +267,8 @@ def _append_history(history, cell: Cell, row: dict, *,
         if isinstance(v, (int, float)) and not isinstance(v, bool) \
                 and np.isfinite(v):
             metrics[f"tel_{k}"] = v
-    cfg = make_scenario(cell.scenario, n_devices=cell.n_devices,
-                        slot_ms=cell.slot_ms, **dict(cell.overrides))
+    cfg, _ = resolve_scenario(cell.scenario, n_devices=cell.n_devices,
+                              slot_ms=cell.slot_ms, **dict(cell.overrides))
     return history.append(
         "sweep", f"{cell.scenario}/{cell.method}/s{cell.seed}", metrics,
         manifest=history_manifest(config_signature=cfg.static_signature(),

@@ -16,7 +16,8 @@ from typing import NamedTuple, Tuple
 
 import jax
 
-from repro.mec.scenarios import SCENARIOS
+from repro.mec.scenarios import (SCENARIOS, is_space_scenario,
+                                 parse_space_scenario, space_scenario_name)
 
 
 class Cell(NamedTuple):
@@ -86,10 +87,14 @@ class SweepSpec:
         object.__setattr__(self, "seeds", tuple(int(s) for s in self.seeds))
         object.__setattr__(self, "overrides",
                            tuple(sorted(tuple(self.overrides))))
-        unknown = [s for s in self.scenarios if s not in SCENARIOS]
+        unknown = [s for s in self.scenarios
+                   if s not in SCENARIOS and not is_space_scenario(s)]
         if unknown:
             raise ValueError(f"unknown scenarios {unknown}; "
                              f"known: {sorted(SCENARIOS)}")
+        for s in self.scenarios:
+            if is_space_scenario(s):
+                parse_space_scenario(s)  # raises on malformed names
 
     @classmethod
     def from_names(cls, scenarios: str, methods: str, seeds, **kw):
@@ -99,6 +104,22 @@ class SweepSpec:
         return cls(scenarios=tuple(s for s in scenarios.split(",") if s),
                    methods=tuple(m for m in methods.split(",") if m),
                    seeds=tuple(seeds), **kw)
+
+    @classmethod
+    def from_space(cls, lo: str, hi: str, draws: int, *,
+                   space_seed: int = 0, **kw):
+        """A grid whose scenario axis is ``draws`` deterministic samples
+        from the (lo, hi) ``ScenarioSpace``.
+
+        Each draw becomes a ``space:<lo>:<hi>:<draw>:<seed>`` scenario
+        column: cells stay plain hashable tuples (the name pins the
+        draw), so hashes are stable, stores resume, and — since every
+        draw shares the lo corner's static structure — the whole axis
+        still packs into one compiled episode per actor family.
+        """
+        return cls(scenarios=tuple(
+            space_scenario_name(lo, hi, d, space_seed)
+            for d in range(int(draws))), **kw)
 
     def expand(self) -> list:
         """Grid -> cells, in deterministic (scenario, method, seed) order."""

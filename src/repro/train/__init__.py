@@ -9,8 +9,10 @@ from repro.train.steps import (
 from repro.train.checkpoint import (
     restore_agent_state,
     restore_checkpoint,
+    restore_population,
     save_agent_state,
     save_checkpoint,
+    save_population,
 )
 
 __all__ = [
@@ -18,4 +20,5 @@ __all__ = [
     "make_prefill_step", "chunked_ce_loss",
     "save_checkpoint", "restore_checkpoint",
     "save_agent_state", "restore_agent_state",
+    "save_population", "restore_population",
 ]

@@ -126,3 +126,23 @@ def restore_agent_state(path: str, like):
     if isinstance(like, AgentDef):
         like = like.init(jax.random.PRNGKey(0))
     return restore_checkpoint(path, like=like)
+
+
+def save_population(path: str, pop, *, level: int = 3) -> None:
+    """Serialize a ``repro.pop`` ``Population`` (or a trainer's
+    ``PopTrainState``): the stacked per-member ``AgentState`` leaves,
+    the ``MemberHypers`` arrays, the generation counter — hyperparams
+    are state data, so one checkpoint holds the whole PBT search."""
+    save_checkpoint(path, pop, level=level)
+
+
+def restore_population(path: str, like):
+    """Restore a population saved by ``save_population``.
+
+    ``like`` is a structural template (e.g. ``init_population(adef,
+    PRNGKey(0), P)`` or a live ``PopTrainState``); the stored leaves
+    replace every value. A mid-PBT restore continues bit-exactly —
+    same surgery, same curriculum draws, same member trajectories as
+    the uninterrupted run (``tests/test_pop.py`` pins it).
+    """
+    return restore_checkpoint(path, like=like)

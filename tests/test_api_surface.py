@@ -34,10 +34,10 @@ def _params(fn):
 def test_agent_def_signatures():
     assert _params(AgentDef.init) == ["self", "key"]
     assert _params(AgentDef.decide) == [
-        "self", "state", "mec_state", "tasks", "key", "sp"]
-    assert _params(AgentDef.train_step) == ["self", "state"]
+        "self", "state", "mec_state", "tasks", "key", "sp", "explore_gain"]
+    assert _params(AgentDef.train_step) == ["self", "state", "lr"]
     assert _params(AgentDef.absorb) == [
-        "self", "state", "graphs", "decisions"]
+        "self", "state", "graphs", "decisions", "lr"]
     assert _params(AgentDef.step) == [
         "self", "state", "mec_state", "tasks", "key", "sp"]
     assert _params(core.agent_def) == ["method", "env", "kw"]

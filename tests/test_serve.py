@@ -393,3 +393,32 @@ class TestLoadgen:
         few = make_trace(n_users=16, n_slots=25, slot_s=0.02, seed=7,
                          max_requests=5)
         assert len(few) == 5
+
+
+# ------------------------------------------------------- token accounting
+class TestTokenAccounting:
+    def test_serve_slot_adds_max_new_per_request(self):
+        syn = EdgeServingEngine(_arch(), _replicas(), scheduler="grle",
+                                batch_slots=4, seed=0, workload="mmpp",
+                                scenario="dyn_bursty", agent_kw=AGENT_KW,
+                                init_model=False)
+        assert syn.tokens_served == 0
+        reqs = [syn.make_request(max_new=m) for m in (8, 16, 4)]
+        syn.serve_slot(reqs)
+        assert syn.tokens_served == 28
+        syn.serve_slot([syn.make_request()])
+        assert syn.tokens_served == 36
+        snap = syn.telemetry_snapshot()
+        assert snap["summary"]["tokens_served"] == 36
+
+    def test_continuous_tokens_match_served_budgets(self):
+        eng = _engine(batch_slots=4, seed=0)
+        trace = make_trace(n_users=8, n_slots=30,
+                           slot_s=float(eng.env.cfg.slot_s),
+                           deadline_slack_s=5.0, seed=2)
+        eng.run(trace)
+        served = eng.counts["served"]
+        assert served > 0
+        assert eng.tokens_served == sum(r.max_new for r in trace[:served])
+        snap = eng.telemetry_snapshot()
+        assert snap["summary"]["tokens_served"] == eng.tokens_served

@@ -5,6 +5,8 @@ import os
 import subprocess
 import sys
 
+import jax
+
 import numpy as np
 import pytest
 
@@ -298,3 +300,66 @@ class TestCLI:
         assert "grle_vs_droo" in sc["ratios"]
         out = capsys.readouterr().out
         assert "| grle |" in out
+
+
+# ----------------------------------------------------------- space scenarios
+class TestSpaceScenarios:
+    def _space_spec(self, draws=2, **kw):
+        base = dict(methods=("grle",), seeds=(0,), n_devices=3, n_slots=20,
+                    replay_capacity=16, batch_size=4, train_every=5)
+        base.update(kw)
+        return SweepSpec.from_space("fig5_baseline", "fig8_csi", draws,
+                                    space_seed=3, **base)
+
+    def test_names_and_hashes_stable(self):
+        """The draw is pinned by the cell's *name*, so hashes survive
+        re-expansion and growing the draw axis never renames old cells."""
+        spec = self._space_spec(2)
+        assert spec.scenarios == ("space:fig5_baseline:fig8_csi:0:3",
+                                  "space:fig5_baseline:fig8_csi:1:3")
+        a, b = spec.expand()
+        assert a.cell_hash != b.cell_hash
+        assert a.cell_hash == self._space_spec(2).expand()[0].cell_hash
+        grown = self._space_spec(4)
+        assert grown.scenarios[:2] == spec.scenarios
+
+    def test_malformed_space_names_rejected(self):
+        for bad in ("space:fig5_baseline:fig8_csi:0",          # short
+                    "space:fig5_baseline:nope:0:0",            # bad corner
+                    "space:fig5_baseline:fig8_csi:x:0"):       # non-int draw
+            with pytest.raises(ValueError):
+                tiny_spec(scenarios=(bad,))
+
+    def test_draw_axis_packs_per_actor_family(self):
+        """Every draw shares the lo corner's structure: a whole draw axis
+        is 1 pack per actor family, exactly like named scenarios."""
+        spec = self._space_spec(3, methods=("grle", "droo"))
+        packs = pack_cells(spec.expand())
+        assert [p.family for p in packs] == ["gcn", "mlp"]
+        for p in packs:
+            assert len(p.cells) == 3
+            assert len(p.scenarios) == 3
+
+    def test_distinct_draws_distinct_params(self):
+        from repro.mec.scenarios import resolve_scenario
+        cfg0, sp0 = resolve_scenario("space:fig5_baseline:fig8_csi:0:3",
+                                     n_devices=3)
+        cfg1, sp1 = resolve_scenario("space:fig5_baseline:fig8_csi:1:3",
+                                     n_devices=3)
+        assert cfg0 == cfg1                       # shared compiled structure
+        assert sp0 is not None and sp1 is not None
+        diffs = [not np.array_equal(np.asarray(x), np.asarray(y))
+                 for x, y in zip(jax.tree_util.tree_leaves(sp0),
+                                 jax.tree_util.tree_leaves(sp1))]
+        assert any(diffs)
+
+    def test_space_packed_matches_sequential(self):
+        spec = self._space_spec(2)
+        (pack,) = pack_cells(spec.expand())
+        packed = run_pack(pack)
+        for cell, row in zip(pack.cells, packed):
+            ref = run_cell(cell)
+            assert row["scenario"] == ref["scenario"]
+            for k in ("avg_accuracy", "ssp", "avg_reward"):
+                np.testing.assert_allclose(row[k], ref[k], rtol=1e-4,
+                                           err_msg=f"{cell.label()}:{k}")

@@ -11,12 +11,13 @@ row objects; every row needs a unique non-empty ``name`` and a
 appropriate to its row family:
 
   throughput rows — one of ``steps_per_s`` / ``cells_per_s`` /
-                    ``us_per_call`` / ``wall_s`` / ``flops``
-                    (finite, positive)
+                    ``us_per_call`` / ``wall_s`` / ``flops`` /
+                    ``requests_per_s`` / ``tokens_per_s`` /
+                    ``slots_per_s`` (finite, positive)
   guard rows (``*_guard``) — ``packs`` and ``cells`` (positive ints)
 
 History files are JSONL, one record per line: ``schema`` (int), ``kind``
-in bench/sweep/serve, a non-empty ``name``, a ``metrics`` object with at
+in bench/sweep/serve/pop, a non-empty ``name``, a ``metrics`` object with at
 least one finite number, and a ``manifest`` carrying the comparability
 stamps (``git_rev``, ``backend``, ``n_devices``).
 
@@ -34,8 +35,9 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 MEASUREMENT_KEYS = ("steps_per_s", "cells_per_s", "us_per_call", "wall_s",
-                    "flops", "requests_per_s")
-HISTORY_KINDS = ("bench", "sweep", "serve")
+                    "flops", "requests_per_s", "tokens_per_s",
+                    "slots_per_s")
+HISTORY_KINDS = ("bench", "sweep", "serve", "pop")
 MANIFEST_KEYS = ("git_rev", "backend", "n_devices")
 
 
